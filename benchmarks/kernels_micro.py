@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks: wall time of the jitted reference paths on CPU
+(the TPU kernels are validated in interpret mode; wall-clock TPU numbers are
+out of scope for this container -- see EXPERIMENTS.md §Roofline for the
+derived performance model)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_all():
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # attention (reference path, jitted)
+    b, s, h, kv, hd = 2, 1024, 8, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, kind="causal"))
+    us = _time(f, q, k, v)
+    flops = 2 * b * s * s * h * hd * 2
+    rows.append(("attention_causal_1k", us, f"{flops/us/1e6:.1f}GFLOP/s"))
+
+    qd = q[:, :1]
+    valid = jnp.ones((b, s), bool)
+    fd = jax.jit(lambda q, k, v: ops.decode_attention(q, k, v, valid_mask=valid))
+    us = _time(fd, qd, k, v)
+    rows.append(("decode_attention_1k", us,
+                 f"{(k.size+v.size)*4/us/1e3:.1f}GB/s_cache_read"))
+
+    # SSD scan
+    bs, ss, hh, pp, nn = 2, 512, 8, 64, 64
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (bs, ss, hh, pp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, ss, hh)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, hh))
+    bm = jax.random.normal(ks[2], (bs, ss, 1, nn)) * 0.5
+    cm = jax.random.normal(ks[3], (bs, ss, 1, nn)) * 0.5
+    d = jnp.ones((hh,))
+    fs = jax.jit(lambda *a: ops.ssd_scan(*a, chunk=128))
+    us = _time(fs, x, dt, a_log, bm, cm, d)
+    rows.append(("ssd_scan_512", us, f"chunk128"))
+
+    # RG-LRU scan
+    xx = jax.random.normal(ks[0], (2, 1024, 512)) * 0.3
+    aa = jax.nn.sigmoid(jax.random.normal(ks[1], (2, 1024, 512)) + 2.0)
+    fr = jax.jit(ops.rglru_scan)
+    us = _time(fr, xx, aa)
+    rows.append(("rglru_scan_1k", us, "assoc_scan"))
+
+    # partition sweep: the controller hot spot at serving scale (256 UEs)
+    from repro.profiling.lmprofiles import all_lm_profiles
+    from repro.profiling.profiles import ProfileBatch
+    import numpy as np
+    profs = list(all_lm_profiles().values())
+    batch = ProfileBatch([profs[i % len(profs)] for i in range(256)])
+    f32 = lambda t: jnp.asarray(t, jnp.float32)
+    scalars = dict(rho=0.12, kappa=1e-28, p_tx=0.1, w_hz=5e6,
+                   n0=10 ** (-17.4) / 1000, f_max_ue=5e9, f_max_es=200e9,
+                   v=10.0, gamma_ue=0.2, gamma_es=0.8, stability_margin=1e-3)
+    lam = jnp.full((256,), 2.0)
+    gain = jnp.full((256,), 1.6e-11)
+    qq = jnp.zeros((256,))
+    fp = jax.jit(lambda *a: ref.partition_sweep_ref(*a, scalars))
+    us = _time(fp, f32(batch.macs), f32(batch.param_bytes),
+               f32(batch.act_bytes), f32(batch.psi),
+               jnp.asarray(batch.L), lam, gain, qq, qq)
+    cells = 256 * (batch.Lmax + 1)
+    rows.append(("partition_sweep_256ue", us, f"{cells/us:.1f}cells/us"))
+
+    return rows

@@ -1,0 +1,124 @@
+"""Roofline table builder (deliverable g): merges the dry-run artifacts
+(benchmarks/out/dryrun/*.json) with the analytic estimators into the
+EXPERIMENTS.md §Roofline table.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dryrun-dir ...] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import get_config
+from repro.launch import specs
+from repro.profiling import roofline as rl
+
+
+def _advice(cell) -> str:
+    dom = cell["dominant"]
+    shape = cell["shape"]
+    if dom == "collective":
+        return ("cut TP all-reduces (overlap/reduce-scatter) or FSDP "
+                "re-gathers (fewer microbatches / wider activation sharding)")
+    if dom == "memory":
+        if "decode" in shape or "500k" in shape:
+            return ("KV/cache traffic bound: quantize cache to int8 or grow "
+                    "batch to amortize weight reads")
+        return "cut activation r/w: fuse norms/FFN, wider remat blocks"
+    return "MXU-bound: raise arithmetic intensity (larger tiles, bf16 flash)"
+
+
+def build_table(dryrun_dir: str, mesh: str = "single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skipped", "reason": r["reason"]})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "error"})
+            continue
+        cfg = get_config(r["arch"])
+        shape = specs.SHAPES[r["shape"]]
+        if shape.kind == "train":
+            from repro.models.steps import default_microbatches
+            mb = default_microbatches(cfg, shape.batch)
+        else:
+            mb = 1
+        coll = r["collectives"]
+        by_kind = dict(coll["bytes_by_kind"])
+        if "f32_bytes" in coll and coll.get("total_bytes"):
+            # bf16-wire correction: XLA:CPU upcasts bf16 collectives to f32;
+            # TPU keeps bf16 on the wire (EXPERIMENTS §Perf accounting note).
+            scale = coll["bf16_wire_corrected_bytes"] / coll["total_bytes"]
+            by_kind = {k: v * scale for k, v in by_kind.items()}
+        terms = rl.terms_for(cfg, shape, shape.kind, by_kind,
+                             chips=r["devices"], microbatches=mb)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "chips": r["devices"],
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "step_s": terms.step_time_s,
+            "model_flops": terms.model_flops,
+            "executed_flops": terms.executed_flops,
+            "useful_fraction": terms.useful_fraction,
+            "roofline_fraction": terms.roofline_fraction,
+            "hlo_flops_per_dev": r["flops"],
+            "memory_per_dev_gb": (
+                (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 1e9
+                if r.get("memory") and "argument_bytes" in r["memory"] else None),
+            "compile_s": r["compile_s"],
+        })
+    for row in rows:
+        if row["status"] == "ok":
+            row["advice"] = _advice(row)
+    return rows
+
+
+def to_markdown(rows) -> str:
+    md = ["| arch | shape | comp s | mem s | coll s | bound | MFU@roof | useful | HBM GB/dev |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            md.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"SKIP ({r.get('reason','')[:40]}…) | — | — | — |")
+            continue
+        mem = f"{r['memory_per_dev_gb']:.1f}" if r["memory_per_dev_gb"] else "?"
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['roofline_fraction']*100:.1f}% | "
+            f"{r['useful_fraction']*100:.0f}% | {mem} |")
+    return "\n".join(md)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="benchmarks/out/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", default="benchmarks/out/roofline.json")
+    args = ap.parse_args()
+    rows = build_table(args.dryrun_dir, args.mesh)
+    os.makedirs(os.path.dirname(args.json), exist_ok=True)
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(to_markdown(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"\ncells: {len(ok)} ok / {len(rows)} total")
+    for bound in ("compute", "memory", "collective"):
+        n = sum(1 for r in ok if r["dominant"] == bound)
+        print(f"  {bound}-bound: {n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Benchmark harness entry point (deliverable d): one experiment per paper
+figure + kernel micro-benchmarks + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV per experiment, as required.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    t_start = time.time()
+    print("name,us_per_call,derived")
+
+    # -- paper figures -------------------------------------------------------
+    from . import paper_figs
+    t0 = time.time()
+    art = paper_figs.load_or_build()
+    build_us = (time.time() - t0) * 1e6
+
+    for r in paper_figs.fig3_convergence(art):
+        _row(f"fig3_convergence[{r['algo']}]",
+             r["train_s"] * 1e6 / max(art["episodes"], 1),
+             f"final_reward={r['reward_last10pct']:.2f};conv_ep={r['convergence_episode']}")
+    for r in paper_figs.fig4_rate_sweep(art):
+        _row(f"fig4[{r['algo']}@{r['rate']}]", 0.0,
+             f"delay={r['delay_s']:.4f}s;energy={r['energy_J']*1e3:.1f}mJ;"
+             f"mem={r['mem_GB']*1e3:.0f}MB;qE={r['q_energy_final']:.1f}")
+    for r in paper_figs.fig5_queue_stability(art):
+        _row(f"fig5[{r['task']}:{r['algo']}]", 0.0,
+             f"peak_queue={r['peak_queue']:.3f}")
+    h = paper_figs.headline(art)
+    by_rate = ";".join(f"@{r:g}={v*100:+.0f}%"
+                       for r, v in sorted(h["delay_reduction_by_rate"].items()))
+    _row("headline_delay_vs_ppo", build_us,
+         f"won_{h['rates_won']}of5_rates;{by_rate}"
+         f";mean={h['mean_delay_reduction']*100:+.1f}%_vs_paper_claim_30%"
+         f";episodes={h['episodes']}"
+         f";note=@2.5_PPO_violates_energy_budget_7x_queue")
+
+    # -- Lyapunov V ablation (beyond-paper) ------------------------------------
+    from . import ablation_v
+    t0 = time.time()
+    vrows = ablation_v.sweep(v_values=(1.0, 10.0, 100.0), episodes=2,
+                             steps=200)
+    for r in vrows:
+        _row(f"ablation_v[V={r['V']:g}]", (time.time() - t0) * 1e6 / 3,
+             f"delay={r['delay_s']:.4f}s;qE={r['q_energy_final']:.1f}")
+
+    # -- kernels ---------------------------------------------------------------
+    from . import kernels_micro
+    for name, us, derived in kernels_micro.bench_all():
+        _row(f"kernel[{name}]", us, derived)
+
+    # -- roofline (from dry-run artifacts; skip silently if sweep not run) -----
+    from . import roofline
+    dd = os.path.join(os.path.dirname(__file__), "out", "dryrun")
+    if os.path.isdir(dd) and os.listdir(dd):
+        rows = roofline.build_table(dd, "single")
+        ok = [r for r in rows if r["status"] == "ok"]
+        for r in ok:
+            _row(f"roofline[{r['arch']}@{r['shape']}]", r["step_s"] * 1e6,
+                 f"bound={r['dominant']};mfu_at_roof={r['roofline_fraction']*100:.1f}%"
+                 f";useful={r['useful_fraction']*100:.0f}%")
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        _row("roofline_summary", 0.0,
+             ";".join(f"{k}={v}" for k, v in sorted(doms.items())))
+    else:
+        _row("roofline_summary", 0.0, "dryrun_artifacts_missing")
+
+    _row("bench_total", (time.time() - t_start) * 1e6,
+         "seconds=%.1f" % (time.time() - t_start))
+
+
+if __name__ == "__main__":
+    main()

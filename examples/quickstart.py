@@ -1,0 +1,42 @@
+"""Quickstart: the paper's system in ~60 seconds on CPU.
+
+Builds the Sec. V-A scenario (5 UEs: 2x AlexNet + 3x ResNet18), trains the
+LyMDO controller briefly, and compares it against the paper's baselines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.env import MecConfig, LAM_FIXED, paper_env
+from repro.core.lymdo import (Runner, RunConfig, edge_cut_fn, local_cut_fn,
+                              oracle_cut_fn, random_cut_fn, run_fixed)
+from repro.core.policies import CategoricalPolicy
+from repro.core.ppo import PPO, PPOConfig
+
+
+def main():
+    env = paper_env()
+    print(f"MEC scenario: {env.n_ue} UEs, profiles "
+          f"{[p.name for p in env.batch.profiles]}")
+
+    agent = PPO(CategoricalPolicy(env.obs_dim, env.L), env.obs_dim, PPOConfig())
+    runner = Runner(env, agent, steps=200)
+    print("\ntraining LyMDO (60 episodes)...")
+    state, hist = runner.train(RunConfig(episodes=60, steps=200, chunk=20))
+
+    eval_env = paper_env(MecConfig(lam_mode=LAM_FIXED))   # lam = 2.5 req/s
+    metrics, _ = Runner(eval_env, agent, steps=200).evaluate(state, episodes=3)
+    print(f"\nLyMDO   @2.5req/s: delay {metrics['delay']*1e3:7.1f} ms  "
+          f"energy {metrics['energy']*1e3:5.1f} mJ  reward {metrics['reward']:8.2f}")
+
+    for name, fn in [("Local", local_cut_fn(eval_env)),
+                     ("Edge", edge_cut_fn(eval_env)),
+                     ("Random", random_cut_fn(eval_env)),
+                     ("Oracle", oracle_cut_fn(eval_env))]:
+        m, _ = run_fixed(eval_env, fn, episodes=3, steps=200)
+        print(f"{name:7s} @2.5req/s: delay {m['delay']*1e3:7.1f} ms  "
+              f"energy {m['energy']*1e3:5.1f} mJ  reward {m['reward']:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

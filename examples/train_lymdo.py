@@ -1,0 +1,64 @@
+"""End-to-end LyMDO training driver (deliverable b): trains the DRL
+controller for a few hundred episodes with fault-tolerant checkpointing --
+kill the process mid-run and rerun: it resumes from the last checkpoint.
+
+  PYTHONPATH=src python examples/train_lymdo.py --episodes 300
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.core.env import MecConfig, LAM_FIXED, paper_env
+from repro.core.lymdo import Runner, RunConfig
+from repro.core.policies import GaussianTanhPolicy
+from repro.core.ppo import PPO, PPOConfig
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=300)
+    ap.add_argument("--chunk", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default="/tmp/lymdo_ckpt")
+    args = ap.parse_args()
+
+    env = paper_env()
+    agent = PPO(GaussianTanhPolicy(env.obs_dim, env.L), env.obs_dim,
+                PPOConfig())
+    runner = Runner(env, agent, steps=200)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    key = jax.random.PRNGKey(0)
+    key, k_init = jax.random.split(key)
+    state = agent.init(k_init)
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        restored, manifest = mgr.restore(state)
+        state = type(state)(*restored) if isinstance(restored, tuple) \
+            else restored
+        start = manifest["step"]
+        print(f"[restore] resumed from episode {start}")
+
+    done = start
+    while done < args.episodes:
+        n = min(args.chunk, args.episodes - done)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), done)
+        state, metrics = runner._train_chunk(state, key, n=n)
+        done += n
+        print(f"ep {done:4d}/{args.episodes} "
+              f"reward {float(np.asarray(metrics['reward'])[-1]):9.2f} "
+              f"delay {float(np.asarray(metrics['delay'])[-1])*1e3:7.1f} ms")
+        mgr.save(done, state, extra={"episodes": done})
+    mgr.wait()
+
+    eval_env = paper_env(MecConfig(lam_mode=LAM_FIXED))
+    m, _ = Runner(eval_env, agent, steps=200).evaluate(state, episodes=5)
+    print(f"\nfinal eval @2.5 req/s: delay {m['delay']*1e3:.1f} ms, "
+          f"reward {m['reward']:.2f} (checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

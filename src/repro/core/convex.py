@@ -1,0 +1,175 @@
+"""Per-slot convex resource allocation (paper Sec. IV-C).
+
+Given the partitioning decision ``cut`` (from the DRL policy), the remaining
+continuous allocation decouples into three convex programs, solved exactly and
+jit-compatibly:
+
+* P3 (eq. 19)  local CPU frequency  f_ue  -- Fibonacci line search (paper) per UE
+* P4 (eq. 20)  edge CPU frequency   f_es  -- closed-form KKT water-filling (eq. 23)
+* P5 (eq. 24)  uplink bandwidth     alpha -- two-level KKT bisection (replaces CVX;
+               see DESIGN.md "Hardware adaptation")
+
+All solvers are fixed-iteration (`lax.fori_loop`) so they lower to TPU and
+vectorize over UEs.  Log-domain comparisons keep P5 stable in float32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-12
+
+# ---------------------------------------------------------------------------
+# P3: local computational resource (Fibonacci search, eq. 19)
+# ---------------------------------------------------------------------------
+
+_FIB_N = 40
+_FIB = np.ones(_FIB_N + 3, dtype=np.float64)
+for _i in range(2, _FIB_N + 3):
+    _FIB[_i] = _FIB[_i - 1] + _FIB[_i - 2]
+# ratio[k] = F_{n-k} / F_{n-k+2}: fraction of the interval probed at step k.
+_FIB_RATIO_LO = np.array([_FIB[_FIB_N - k] / _FIB[_FIB_N - k + 2] for k in range(_FIB_N)])
+_FIB_RATIO_HI = np.array([_FIB[_FIB_N - k + 1] / _FIB[_FIB_N - k + 2] for k in range(_FIB_N)])
+
+
+def p3_objective(f, q_energy, kappa, d_ue, lam, v):
+    """Eq. (19): Q*kappa*f^2*d*lam + V*(d/f + d^2 lam / (2 (f^2 - f d lam)))."""
+    f = jnp.maximum(f, _EPS)
+    energy = q_energy * kappa * jnp.square(f) * d_ue * lam
+    proc = d_ue / f
+    denom = jnp.maximum(jnp.square(f) - f * d_ue * lam, _EPS)
+    queue = jnp.square(d_ue) * lam / (2.0 * denom)
+    return energy + v * (proc + queue)
+
+
+def solve_p3(q_energy, kappa, d_ue, lam, v, f_max, *, stability_margin=1e-3):
+    """Fibonacci-search minimizer of (19) per UE on (d*lam, f_max].
+
+    Vectorized over leading UE axis.  UEs with ``d_ue == 0`` (full offload)
+    get f_ue = 0.  The caller guarantees feasibility ``d*lam < f_max`` (C7,
+    enforced by action projection); if violated we clamp to f_max.
+    """
+    lo = d_ue * lam * (1.0 + stability_margin) + 1.0
+    hi = jnp.full_like(lo, f_max)
+    lo = jnp.minimum(lo, hi)
+
+    obj = functools.partial(p3_objective, q_energy=q_energy, kappa=kappa,
+                            d_ue=d_ue, lam=lam, v=v)
+
+    ratio_lo = jnp.asarray(_FIB_RATIO_LO, dtype=lo.dtype)
+    ratio_hi = jnp.asarray(_FIB_RATIO_HI, dtype=lo.dtype)
+
+    def body(k, ab):
+        a, b = ab
+        span = b - a
+        x1 = a + ratio_lo[k] * span
+        x2 = a + ratio_hi[k] * span
+        f1, f2 = obj(x1), obj(x2)
+        take_left = f1 < f2
+        return jnp.where(take_left, a, x1), jnp.where(take_left, x2, b)
+
+    a, b = jax.lax.fori_loop(0, _FIB_N, body, (lo, hi))
+    f_star = 0.5 * (a + b)
+    # Also consider the upper boundary (optimum can sit at f_max when Q ~ 0).
+    f_star = jnp.where(obj(hi) < obj(f_star), hi, f_star)
+    return jnp.where(d_ue > 0, f_star, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# P4: edge computational resource (closed form, eq. 23)
+# ---------------------------------------------------------------------------
+
+def solve_p4(d_es, f_max_es):
+    """f_es* = f_max * sqrt(d_n) / sum_m sqrt(d_m)  (eq. 23).
+
+    UEs with no edge portion receive 0 (sqrt(0) = 0 drops them naturally).
+    If nobody offloads, return zeros.
+    """
+    root = jnp.sqrt(jnp.maximum(d_es, 0.0))
+    total = jnp.sum(root)
+    safe_total = jnp.where(total > 0, total, 1.0)
+    return jnp.where(total > 0, f_max_es * root / safe_total, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# P5: communication resource (two-level KKT bisection, eq. 24)
+# ---------------------------------------------------------------------------
+
+_ALPHA_MIN = 1e-7
+_INNER_ITERS = 50
+_OUTER_ITERS = 60
+
+
+def _log_rate_terms(alpha, s):
+    """r(a) = a*log2(1+s/a); returns (log r, log r') computed stably."""
+    a = jnp.maximum(alpha, _ALPHA_MIN * 1e-3)
+    l2 = jnp.log2(1.0 + s / a)
+    log_r = jnp.log(a) + jnp.log(jnp.maximum(l2, _EPS))
+    # r'(a) = log2(1+s/a) - s / (ln2 * (a + s))  > 0
+    rp = l2 - s / (jnp.log(2.0) * (a + s))
+    log_rp = jnp.log(jnp.maximum(rp, _EPS))
+    return log_r, log_rp
+
+
+def _log_marginal(alpha, s, log_c):
+    """log of m(a) = c * r'(a) / r(a)^2 -- the (negated) objective slope."""
+    log_r, log_rp = _log_rate_terms(alpha, s)
+    return log_c + log_rp - 2.0 * log_r
+
+
+def solve_p5(q_energy, p_tx, lam, v, psi_bytes, w_hz, gain, n0):
+    """Minimize eq. (24) s.t. sum(alpha) <= 1, alpha >= 0.
+
+    KKT: the marginal m_n(alpha_n) is equalized across UEs with psi > 0 and
+    the bandwidth constraint is tight.  m is strictly decreasing (convexity),
+    so: inner bisection inverts m_n at a trial multiplier eta, outer bisection
+    drives sum(alpha(eta)) -> 1.  Runs entirely in log domain.
+    """
+    bits = 8.0 * psi_bytes
+    active = bits > 0
+    n_active = jnp.sum(active)
+    s = p_tx * gain / (w_hz * n0)                     # per-UE SNR coefficient
+    coeff = (q_energy * p_tx * lam + v) * bits / w_hz  # c_n in DESIGN notation
+    log_c = jnp.log(jnp.maximum(coeff, _EPS))
+
+    def alpha_of_eta(log_eta):
+        def inner(_, ab):
+            a_lo, a_hi = ab
+            mid = 0.5 * (a_lo + a_hi)
+            too_steep = _log_marginal(mid, s, log_c) > log_eta  # m(mid) > eta -> alpha* > mid
+            return jnp.where(too_steep, mid, a_lo), jnp.where(too_steep, a_hi, mid)
+
+        lo = jnp.full_like(s, _ALPHA_MIN)
+        hi = jnp.ones_like(s)
+        lo, hi = jax.lax.fori_loop(0, _INNER_ITERS, inner, (lo, hi))
+        return jnp.where(active, 0.5 * (lo + hi), 0.0)
+
+    def outer(_, bounds):
+        e_lo, e_hi = bounds
+        mid = 0.5 * (e_lo + e_hi)
+        total = jnp.sum(alpha_of_eta(mid))
+        # sum(alpha) decreasing in eta: too much bandwidth -> raise eta.
+        over = total > 1.0
+        return jnp.where(over, mid, e_lo), jnp.where(over, e_hi, mid)
+
+    e_lo, e_hi = jax.lax.fori_loop(
+        0, _OUTER_ITERS, outer,
+        (jnp.asarray(-80.0, s.dtype), jnp.asarray(80.0, s.dtype)))
+    alpha = alpha_of_eta(0.5 * (e_lo + e_hi))
+    # Exactness: single active UE -> alpha = 1; none -> zeros.
+    alpha = jnp.where(n_active == 1, jnp.where(active, 1.0, 0.0), alpha)
+    # Normalize residual bisection slack onto active UEs.
+    total = jnp.sum(alpha)
+    alpha = jnp.where(n_active > 0, alpha / jnp.maximum(total, _EPS), 0.0)
+    return alpha
+
+
+def p5_objective(alpha, q_energy, p_tx, lam, v, psi_bytes, w_hz, gain, n0):
+    """Eq. (24) objective value (for tests / oracle search)."""
+    from .queueing import trans_delay
+
+    t = trans_delay(psi_bytes, alpha, w_hz, p_tx, gain, n0)
+    return jnp.sum((q_energy * p_tx * lam + v) * t)

@@ -1,0 +1,46 @@
+"""UE energy (eq. 5) and model-memory (eq. 6) models.
+
+Canonical units: Joules (per 1-second slot, i.e. average power x 1 s) and
+GIGABYTES for the memory-cost bookkeeping -- the paper's Table I constants
+(nu_e = 100 with e_n ~ 0.04-0.06 J; nu_c = 10 with eps_n ~ 0.03-0.1 GB) only
+produce commensurate virtual-queue drifts under J + GB scaling; see DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+GB = 1e9
+
+
+def compute_energy(f_ue, d_ue, lam, kappa):
+    """Local computation power E^comp = kappa * f^2 * d * lam   [J/s].
+
+    ``d = rho * sum M(l)`` cycles/task; ``kappa * f^2`` J/cycle; ``lam``
+    tasks/s.  (Equivalent to the paper's kappa*rho*f^2*sum(M)*lam.)
+    """
+    return kappa * jnp.square(f_ue) * d_ue * lam
+
+
+def trans_energy(p_tx, t_trans, lam):
+    """Offloading transmission power E^trans = p * T_trans * lam   [J/s]."""
+    return p_tx * t_trans * lam
+
+
+def ue_energy(f_ue, d_ue, lam, kappa, p_tx, t_trans):
+    """Total UE power draw for the slot (eq. 5)."""
+    return compute_energy(f_ue, d_ue, lam, kappa) + trans_energy(p_tx, t_trans, lam)
+
+
+def memory_cost(prefix_params, suffix_params, prefix_act_max, suffix_act_max,
+                gamma_ue, gamma_es):
+    """Deployment memory cost (eq. 6), in GB.
+
+    cost = gamma_ue * (local params) + max local activation
+         + gamma_es * (edge  params) + max edge  activation
+
+    All four inputs are BYTES gathered at the current cut from the
+    ProfileBatch prefix tables.
+    """
+    local = gamma_ue * prefix_params + prefix_act_max
+    edge = gamma_es * suffix_params + suffix_act_max
+    return (local + edge) / GB

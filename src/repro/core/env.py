@@ -1,0 +1,265 @@
+"""MEC cooperative-inference environment (paper Sec. II + V-A).
+
+Pure-functional JAX environment: ``reset`` / ``step`` are jittable and
+vmappable; one step = one time slot of the slotted system.  The step performs
+the *entire* per-slot pipeline of LyMDO's inner loop given the partitioning
+action: feasibility projection (C7), convex resource allocation (P3-P5),
+delay/energy/memory evaluation (eqs. 1-6), reward (14) and virtual-queue
+updates (8)-(9).
+
+Simulation constants default to the paper's Table I / Sec. V-A setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..profiling.profiles import LayerProfile, ProfileBatch
+from . import convex, energymem, queueing
+from .lyapunov import VirtualQueues, reward as lyapunov_reward, update_queues
+
+# Arrival-rate processes
+LAM_IID_UNIFORM = 0   # lambda ~ U(low, high) iid per UE/slot (training default)
+LAM_FIXED = 1         # constant per-UE rate (Fig. 4 evaluation sweeps)
+LAM_PEAK = 2          # constant base + peak window (Fig. 5 stability runs)
+
+
+def free_space_gain(distance_m=150.0, antenna_gain=3.0, carrier_hz=915e6,
+                    path_loss_exp=3.0):
+    """Mean channel gain h_bar = A_d (c / 4 pi f_c d)^d_e  (Sec. V-A)."""
+    wavelength_term = 3e8 / (4.0 * np.pi * carrier_hz * distance_m)
+    return antenna_gain * wavelength_term ** path_loss_exp
+
+
+@dataclasses.dataclass(frozen=True)
+class MecConfig:
+    """Scenario constants (defaults = paper Table I / Sec. V-A)."""
+
+    w_hz: float = 5e6                 # uplink bandwidth W
+    n0: float = 10 ** (-174.0 / 10.0) / 1000.0   # -174 dBm/Hz -> W/Hz
+    p_tx: float = 0.1                 # UE transmit power [W]
+    rho: float = 0.12                 # CPU cycles per MAC
+    kappa: float = 1e-28              # energy coefficient
+    f_max_ue: float = 1.5e9           # UE CPU cap [Hz]
+    f_max_es: float = 15e9            # ES CPU cap [Hz]
+    v: float = 10.0                   # Lyapunov penalty weight V
+    nu_e: float = 100.0               # energy-queue step (eq. 8)
+    nu_c: float = 10.0                # memory-queue step (eq. 9)
+    gamma_ue: float = 0.2             # UE memory cost factor
+    gamma_es: float = 0.8             # ES memory cost factor
+    lam_low: float = 0.5              # request/s
+    lam_high: float = 2.5
+    lam_mode: int = LAM_IID_UNIFORM
+    peak_start: int = 75              # Fig. 5 peak-workload window
+    peak_stop: int = 110
+    peak_boost: float = 1.0           # added req/s inside the window
+    stability_margin: float = 1e-3    # C7 projection slack
+    edge_queueing: bool = False       # eq. 4 (False) vs G/D/1 correction (True)
+    queue_obs_scale: float = 1e-2     # observation scaling for Q/W entries
+
+
+class MecState(NamedTuple):
+    key: jax.Array
+    t: jax.Array            # slot index, int32
+    gain: jax.Array         # (N,) current channel gains h
+    lam: jax.Array          # (N,) current arrival rates
+    queues: VirtualQueues   # Q(t), W(t)
+
+
+class SlotResult(NamedTuple):
+    """Everything the algorithms/benchmarks need from one slot."""
+
+    reward: jax.Array
+    delay: jax.Array        # (N,) T_E2E
+    t_ue: jax.Array
+    t_tx: jax.Array
+    t_es: jax.Array
+    energy: jax.Array       # (N,) E_ue [J/slot]
+    mem_cost: jax.Array     # (N,) C_tot [GB]
+    cut: jax.Array          # (N,) projected partition decision
+    alpha: jax.Array
+    f_ue: jax.Array
+    f_es: jax.Array
+    q_energy: jax.Array     # Q(t) used in the reward (pre-update)
+    q_memory: jax.Array
+
+
+class MecEnv:
+    """N-UE cooperative-inference environment over a ProfileBatch.
+
+    All methods are pure; the instance only holds constants, so jitting
+    ``env.step`` (or closing over it in a scan) is safe.
+    """
+
+    def __init__(self, profiles: Sequence[LayerProfile], cfg: MecConfig,
+                 e_budget: Sequence[float], c_budget: Sequence[float],
+                 mean_gain: float | None = None,
+                 lam_fixed: Sequence[float] | None = None):
+        self.cfg = cfg
+        self.batch = ProfileBatch(profiles)
+        n = self.batch.n
+        as_f32 = lambda a: jnp.asarray(a, jnp.float32)
+        self.n_ue = n
+        self.num_cuts = self.batch.Lmax + 1
+        self.L = jnp.asarray(self.batch.L, jnp.int32)
+        self.prefix_macs = as_f32(self.batch.prefix_macs)
+        self.suffix_macs = as_f32(self.batch.suffix_macs)
+        self.psi = as_f32(self.batch.psi)
+        self.prefix_params = as_f32(self.batch.prefix_params)
+        self.suffix_params = as_f32(self.batch.suffix_params)
+        self.prefix_act_max = as_f32(self.batch.prefix_act_max)
+        self.suffix_act_max = as_f32(self.batch.suffix_act_max)
+        self.e_budget = as_f32(e_budget)
+        self.c_budget = as_f32(c_budget)
+        if self.e_budget.shape != (n,) or self.c_budget.shape != (n,):
+            raise ValueError("budgets must have one entry per UE")
+        self.mean_gain = jnp.float32(
+            free_space_gain() if mean_gain is None else mean_gain)
+        self.lam_fixed = as_f32(
+            np.full(n, cfg.lam_high) if lam_fixed is None else lam_fixed)
+        # Max feasible cut per (UE, lambda) is recomputed each slot (C7).
+
+    # -- observation ------------------------------------------------------
+
+    @property
+    def obs_dim(self) -> int:
+        return 4 * self.n_ue
+
+    @property
+    def action_dim(self) -> int:
+        return self.n_ue
+
+    def observe(self, state: MecState) -> jax.Array:
+        """s^t = {h, lambda, Q, W} (Sec. IV-B1), scaled to O(1)."""
+        c = self.cfg
+        return jnp.concatenate([
+            state.gain / self.mean_gain,
+            state.lam,
+            c.queue_obs_scale * state.queues.energy,
+            c.queue_obs_scale * state.queues.memory,
+        ])
+
+    # -- exogenous processes ----------------------------------------------
+
+    def _draw(self, key, t):
+        c = self.cfg
+        k_gain, k_lam = jax.random.split(key)
+        beta = jax.random.exponential(k_gain, (self.n_ue,), jnp.float32)
+        gain = beta * self.mean_gain  # Rayleigh fading power
+        u = jax.random.uniform(k_lam, (self.n_ue,), jnp.float32,
+                               c.lam_low, c.lam_high)
+        in_peak = jnp.logical_and(t >= c.peak_start, t < c.peak_stop)
+        peak = self.lam_fixed + jnp.where(in_peak, c.peak_boost, 0.0)
+        lam = jax.lax.switch(
+            jnp.int32(c.lam_mode),
+            [lambda: u, lambda: self.lam_fixed, lambda: peak])
+        return gain, lam
+
+    def reset(self, key: jax.Array) -> MecState:
+        key, sub = jax.random.split(key)
+        gain, lam = self._draw(sub, jnp.int32(0))
+        return MecState(key=key, t=jnp.int32(0), gain=gain, lam=lam,
+                        queues=VirtualQueues.zeros(self.n_ue))
+
+    # -- feasibility (C7) --------------------------------------------------
+
+    def max_feasible_cut(self, lam: jax.Array) -> jax.Array:
+        """Largest cut whose local queue is stable: rho*prefix*lam < f_max."""
+        c = self.cfg
+        demand = c.rho * self.prefix_macs * lam[:, None] * (1.0 + c.stability_margin)
+        feasible = demand < c.f_max_ue          # (N, C); monotone in cut
+        return jnp.minimum(jnp.sum(feasible, axis=1) - 1, self.L)
+
+    def project_cut(self, cut: jax.Array, lam: jax.Array) -> jax.Array:
+        return jnp.clip(cut, 0, self.max_feasible_cut(lam)).astype(jnp.int32)
+
+    # -- per-cut gathers ----------------------------------------------------
+
+    def _gather(self, table: jax.Array, cut: jax.Array) -> jax.Array:
+        return jnp.take_along_axis(table, cut[:, None], axis=1)[:, 0]
+
+    # -- one slot -----------------------------------------------------------
+
+    def step(self, state: MecState, cut: jax.Array) -> tuple[MecState, SlotResult]:
+        """LyMDO inner loop: partitioning action + exact convex allocation."""
+        c = self.cfg
+        cut = self.project_cut(cut, state.lam)
+        d_ue = c.rho * self._gather(self.prefix_macs, cut)
+        d_es = c.rho * self._gather(self.suffix_macs, cut)
+        psi = self._gather(self.psi, cut)
+
+        q = state.queues
+        f_es = convex.solve_p4(d_es, c.f_max_es)
+        f_ue = convex.solve_p3(q.energy, c.kappa, d_ue, state.lam, c.v,
+                               c.f_max_ue, stability_margin=c.stability_margin)
+        alpha = convex.solve_p5(q.energy, c.p_tx, state.lam, c.v, psi,
+                                c.w_hz, state.gain, c.n0)
+        return self._evaluate(state, cut, alpha, f_ue, f_es, d_ue, d_es, psi)
+
+    def step_joint(self, state: MecState, cut: jax.Array, alpha: jax.Array,
+                   f_ue: jax.Array, f_es: jax.Array) -> tuple[MecState, SlotResult]:
+        """Paper's "PPO" baseline: all four decisions come from the agent.
+
+        Only hard physics is enforced: C7 projection on the cut and a clamp of
+        f_ue into the stable band (a near-boundary f_ue still yields the huge
+        queuing delays the paper describes in Fig. 3's discussion).
+        """
+        c = self.cfg
+        cut = self.project_cut(cut, state.lam)
+        d_ue = c.rho * self._gather(self.prefix_macs, cut)
+        d_es = c.rho * self._gather(self.suffix_macs, cut)
+        psi = self._gather(self.psi, cut)
+        lo = jnp.where(d_ue > 0,
+                       d_ue * state.lam * (1.0 + c.stability_margin) + 1.0, 0.0)
+        f_ue = jnp.clip(f_ue, lo, c.f_max_ue)
+        f_ue = jnp.where(d_ue > 0, f_ue, 0.0)
+        f_es = jnp.where(d_es > 0, f_es, 0.0)
+        alpha = jnp.where(psi > 0, alpha, 0.0)
+        return self._evaluate(state, cut, alpha, f_ue, f_es, d_ue, d_es, psi)
+
+    def _evaluate(self, state, cut, alpha, f_ue, f_es, d_ue, d_es, psi):
+        c = self.cfg
+        q = state.queues
+        delay, (t_ue, t_tx, t_es) = queueing.e2e_delay(
+            state.lam, f_ue, f_es, d_ue, d_es, psi, alpha,
+            c.w_hz, c.p_tx, state.gain, c.n0, edge_queueing=c.edge_queueing)
+
+        energy = energymem.ue_energy(f_ue, d_ue, state.lam, c.kappa, c.p_tx, t_tx)
+        mem = energymem.memory_cost(
+            self._gather(self.prefix_params, cut),
+            self._gather(self.suffix_params, cut),
+            self._gather(self.prefix_act_max, cut),
+            self._gather(self.suffix_act_max, cut),
+            c.gamma_ue, c.gamma_es)
+
+        rew = lyapunov_reward(q, energy, mem, delay, c.v)
+        new_queues = update_queues(q, energy, mem, self.e_budget, self.c_budget,
+                                   c.nu_e, c.nu_c)
+
+        key, sub = jax.random.split(state.key)
+        t_next = state.t + 1
+        gain, lam = self._draw(sub, t_next)
+        new_state = MecState(key=key, t=t_next, gain=gain, lam=lam,
+                             queues=new_queues)
+        result = SlotResult(
+            reward=rew, delay=delay, t_ue=t_ue, t_tx=t_tx, t_es=t_es,
+            energy=energy, mem_cost=mem, cut=cut, alpha=alpha,
+            f_ue=f_ue, f_es=f_es,
+            q_energy=q.energy, q_memory=q.memory)
+        return new_state, result
+
+
+def paper_env(cfg: MecConfig = MecConfig(), n_alexnet: int = 2,
+              n_resnet: int = 3) -> MecEnv:
+    """The paper's Sec. V-A scenario: 5 UEs = 2x AlexNet + 3x ResNet18,
+    e = (40, 60) mJ, eps = (100, 30) MB (J / GB canonical units)."""
+    from ..profiling.convnets import alexnet_profile, resnet18_profile
+
+    profiles = [alexnet_profile()] * n_alexnet + [resnet18_profile()] * n_resnet
+    e_budget = [0.040] * n_alexnet + [0.060] * n_resnet
+    c_budget = [0.100] * n_alexnet + [0.030] * n_resnet
+    return MecEnv(profiles, cfg, e_budget, c_budget)

@@ -1,0 +1,53 @@
+"""Lyapunov virtual queues and drift-plus-penalty machinery (Sec. IV-A).
+
+The long-term constraints C1 (energy) and C2 (memory) of P1 are absorbed into
+virtual queues Q_n (energy) and W_n (memory):
+
+    Q_n(t+1) = [Q_n(t) + nu_e (E_n - e_n)]^+        (eq. 8)
+    W_n(t+1) = [W_n(t) + nu_c (C_n - eps_n)]^+      (eq. 9)
+
+Minimizing the per-slot drift-plus-penalty objective (eq. 11)
+
+    sum_n Q_n E_n + W_n C_n + V * T_n
+
+then solves P1 up to the standard O(1/V) optimality / O(V) queue-backlog
+Lyapunov trade-off (paper refs. [15], [16]).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class VirtualQueues(NamedTuple):
+    energy: jnp.ndarray  # Q(t), one per UE
+    memory: jnp.ndarray  # W(t), one per UE
+
+    @staticmethod
+    def zeros(n: int, dtype=jnp.float32) -> "VirtualQueues":
+        return VirtualQueues(jnp.zeros(n, dtype), jnp.zeros(n, dtype))
+
+
+def update_queues(q: VirtualQueues, energy, mem_cost, e_budget, c_budget,
+                  nu_e: float, nu_c: float) -> VirtualQueues:
+    """Eqs. (8)-(9)."""
+    return VirtualQueues(
+        energy=jnp.maximum(q.energy + nu_e * (energy - e_budget), 0.0),
+        memory=jnp.maximum(q.memory + nu_c * (mem_cost - c_budget), 0.0),
+    )
+
+
+def lyapunov_function(q: VirtualQueues):
+    """L(Theta) = 1/2 sum_n (Q_n^2 + W_n^2)."""
+    return 0.5 * (jnp.sum(jnp.square(q.energy)) + jnp.sum(jnp.square(q.memory)))
+
+
+def per_slot_objective(q: VirtualQueues, energy, mem_cost, delay, v: float):
+    """Eq. (11) / negative of reward (14): sum_n Q E + W C + V T."""
+    return jnp.sum(q.energy * energy + q.memory * mem_cost + v * delay)
+
+
+def reward(q: VirtualQueues, energy, mem_cost, delay, v: float):
+    """Eq. (14)."""
+    return -per_slot_objective(q, energy, mem_cost, delay, v)

@@ -1,0 +1,25 @@
+"""Minimal pure-JAX MLP stack for the PPO actor/critic (Sec. V-A: two hidden
+layers, 128 and 64 units)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    """He/orthogonal-free init: normal * sqrt(2/fan_in), zero bias."""
+    params = []
+    for din, dout in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout), dtype) * jnp.sqrt(2.0 / din)
+        params.append({"w": w, "b": jnp.zeros((dout,), dtype)})
+    return params
+
+
+def mlp_apply(params, x, *, final_scale: float = 1.0):
+    """tanh-activated MLP; final layer linear, optionally down-scaled
+    (small-init trick for policy heads)."""
+    for layer in params[:-1]:
+        x = jnp.tanh(x @ layer["w"] + layer["b"])
+    last = params[-1]
+    return (x @ last["w"] + last["b"]) * final_scale

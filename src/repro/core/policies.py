@@ -1,0 +1,152 @@
+"""Partitioning-policy heads for PPO (Sec. IV-B).
+
+Two interchangeable action representations:
+
+* ``GaussianTanhPolicy`` -- the paper's design: the actor emits a real score
+  y_n per UE; eq. (13) maps tanh(y) onto the integer cut.  The PPO ratio is
+  computed on the Gaussian over y (the deterministic tanh/floor transform
+  cancels in the ratio).  NOTE: the paper's floor(L*(tanh+1)/2) almost surely
+  misses the fully-local cut L; we use span L+1 with a clip so the closed set
+  {0..L} is reachable (DESIGN.md §8).
+* ``CategoricalPolicy`` -- beyond-paper ablation: factored categorical over
+  cuts with infeasible cuts masked; usually converges faster.
+
+Both also provide the *joint* variant used by the paper's "PPO" baseline
+(partitioning + all resources in one action vector, no convex assist).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .networks import mlp_apply, mlp_init
+
+_LOG2PI = jnp.log(2.0 * jnp.pi)
+
+
+def _gauss_logp(y, mean, log_std):
+    var = jnp.exp(2.0 * log_std)
+    return jnp.sum(-0.5 * (jnp.square(y - mean) / var + 2.0 * log_std + _LOG2PI),
+                   axis=-1)
+
+
+def map_cut(y, num_layers):
+    """Eq. (13) with closed-range extension: cut in {0..L}."""
+    frac = 0.5 * (jnp.tanh(y) + 1.0)
+    return jnp.clip(jnp.floor((num_layers + 1) * frac), 0, num_layers).astype(jnp.int32)
+
+
+class GaussianTanhPolicy:
+    """Paper-faithful continuous head (one y per UE)."""
+
+    def __init__(self, obs_dim: int, num_layers, hidden=(128, 64),
+                 init_log_std: float = -0.5):
+        self.obs_dim = obs_dim
+        self.num_layers = jnp.asarray(num_layers)   # (N,) per-UE L_n
+        self.act_dim = int(self.num_layers.shape[0])
+        self.hidden = tuple(hidden)
+        self.init_log_std = init_log_std
+
+    def init(self, key):
+        k1, = jax.random.split(key, 1)
+        return {
+            "mlp": mlp_init(k1, (self.obs_dim, *self.hidden, self.act_dim)),
+            "log_std": jnp.full((self.act_dim,), self.init_log_std, jnp.float32),
+        }
+
+    def _mean(self, params, obs):
+        return mlp_apply(params["mlp"], obs, final_scale=0.1)
+
+    def sample(self, params, obs, key):
+        mean = self._mean(params, obs)
+        log_std = params["log_std"]
+        y = mean + jnp.exp(log_std) * jax.random.normal(key, mean.shape)
+        return y, _gauss_logp(y, mean, log_std)
+
+    def logp(self, params, obs, y):
+        return _gauss_logp(y, self._mean(params, obs), params["log_std"])
+
+    def mean_action(self, params, obs):
+        return self._mean(params, obs)
+
+    def entropy(self, params, obs):
+        del obs
+        return jnp.sum(params["log_std"] + 0.5 * (_LOG2PI + 1.0))
+
+    def to_cut(self, y):
+        return map_cut(y, self.num_layers)
+
+
+class CategoricalPolicy:
+    """Factored categorical over cuts {0..L_n} per UE (beyond-paper)."""
+
+    def __init__(self, obs_dim: int, num_layers, hidden=(128, 64)):
+        self.obs_dim = obs_dim
+        self.num_layers = jnp.asarray(num_layers)
+        self.n_ue = int(self.num_layers.shape[0])
+        self.num_cuts = int(self.num_layers.max()) + 1
+        self.hidden = tuple(hidden)
+
+    def init(self, key):
+        out = self.n_ue * self.num_cuts
+        return {"mlp": mlp_init(key, (self.obs_dim, *self.hidden, out))}
+
+    def _logits(self, params, obs):
+        raw = mlp_apply(params["mlp"], obs, final_scale=0.1)
+        logits = raw.reshape(*raw.shape[:-1], self.n_ue, self.num_cuts)
+        cuts = jnp.arange(self.num_cuts)
+        mask = cuts[None, :] <= self.num_layers[:, None]
+        return jnp.where(mask, logits, -1e9)
+
+    def sample(self, params, obs, key):
+        logits = self._logits(params, obs)
+        cut = jax.random.categorical(key, logits, axis=-1)
+        return cut, self._logp_from_logits(logits, cut)
+
+    @staticmethod
+    def _logp_from_logits(logits, cut):
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        sel = jnp.take_along_axis(logp, cut[..., None], axis=-1)[..., 0]
+        return jnp.sum(sel, axis=-1)
+
+    def logp(self, params, obs, cut):
+        return self._logp_from_logits(self._logits(params, obs), cut)
+
+    def mean_action(self, params, obs):
+        return jnp.argmax(self._logits(params, obs), axis=-1)
+
+    def entropy(self, params, obs):
+        logits = self._logits(params, obs)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.sum(jnp.exp(logp) * jnp.where(logp > -1e8, logp, 0.0))
+
+    def to_cut(self, cut):
+        return cut.astype(jnp.int32)
+
+
+class JointGaussianPolicy(GaussianTanhPolicy):
+    """The paper's "PPO" baseline head: 4N-dim action = {cut, alpha, f_ue,
+    f_es} with no convex assist.  Mappings keep per-slot constraints C3-C6
+    satisfiable: alpha via softmax (C4), frequencies via sigmoid/softmax caps
+    (C3, C6); C7 is enforced by the same projection LyMDO uses.
+    """
+
+    def __init__(self, obs_dim: int, num_layers, f_max_ue: float,
+                 f_max_es: float, hidden=(128, 64), init_log_std: float = -0.5):
+        self._n = int(jnp.asarray(num_layers).shape[0])
+        super().__init__(obs_dim, num_layers, hidden, init_log_std)
+        self.act_dim = 4 * self._n          # overrides head width
+        self.f_max_ue = f_max_ue
+        self.f_max_es = f_max_es
+
+    def split(self, y):
+        """y (.., 4N) -> (cut, alpha, f_ue, f_es)."""
+        n = self._n
+        y_cut, y_alpha, y_fue, y_fes = jnp.split(y, 4, axis=-1)
+        cut = map_cut(y_cut, self.num_layers)
+        alpha = jax.nn.softmax(y_alpha, axis=-1)
+        f_ue = jax.nn.sigmoid(y_fue) * self.f_max_ue
+        f_es = jax.nn.softmax(y_fes, axis=-1) * self.f_max_es
+        return cut, alpha, f_ue, f_es

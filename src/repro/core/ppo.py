@@ -1,0 +1,130 @@
+"""Pure-JAX PPO (Sec. IV-B, Algorithm 1).
+
+Matches the paper's setup: actor + critic MLPs with hidden sizes (128, 64),
+Adam at 3e-4, clip eps = 0.2, replay memory of one episode (K slots) that is
+consumed and cleared on every fill.  The advantage estimator is GAE(gamma,
+lambda); ``gae_lambda = 1.0`` (default) reproduces the paper's discounted
+estimator (eq. 16/17), with a terminal (non-bootstrapped) episode end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adam import adam
+from .networks import mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 3e-4
+    gamma: float = 0.95
+    gae_lambda: float = 1.0        # 1.0 == paper's estimator
+    clip_eps: float = 0.2          # paper Sec. V-A
+    epochs: int = 8                # passes over the filled memory
+    value_coef: float = 0.5
+    entropy_coef: float = 0.0      # paper uses none; ablations may set >0
+    reward_scale: float = 0.02     # conditions the value target only
+    adv_norm: bool = True
+    bootstrap_last: bool = False   # paper sums to the episode end
+    grad_clip: float = 0.5
+    critic_hidden: tuple = (128, 64)
+
+
+class Trajectory(NamedTuple):
+    obs: jax.Array       # (K, obs_dim)
+    action: jax.Array    # (K, ...) policy-native representation
+    logp: jax.Array      # (K,)
+    reward: jax.Array    # (K,) raw environment rewards (eq. 14)
+    value: jax.Array     # (K,) critic at collection time
+    last_value: jax.Array  # () critic at s_K
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+
+
+class PPO:
+    """Policy-agnostic PPO: works with any head from ``policies.py``."""
+
+    def __init__(self, policy, obs_dim: int, cfg: PPOConfig = PPOConfig()):
+        self.policy = policy
+        self.obs_dim = obs_dim
+        self.cfg = cfg
+        self._opt_init, self._opt_update = adam(cfg.lr, grad_clip=cfg.grad_clip)
+
+    # -- parameters --------------------------------------------------------
+
+    def init(self, key) -> TrainState:
+        k_pi, k_v = jax.random.split(key)
+        params = {
+            "pi": self.policy.init(k_pi),
+            "v": mlp_init(k_v, (self.obs_dim, *self.cfg.critic_hidden, 1)),
+        }
+        return TrainState(params=params, opt_state=self._opt_init(params))
+
+    def value(self, params, obs):
+        return mlp_apply(params["v"], obs)[..., 0]
+
+    def act(self, params, obs, key):
+        """Sample action + diagnostics for rollout collection."""
+        action, logp = self.policy.sample(params["pi"], obs, key)
+        return action, logp, self.value(params, obs)
+
+    # -- advantage estimation ----------------------------------------------
+
+    def gae(self, traj: Trajectory):
+        cfg = self.cfg
+        r = traj.reward * cfg.reward_scale
+        v = traj.value
+        last_v = jnp.where(cfg.bootstrap_last, traj.last_value, 0.0)
+        v_next = jnp.concatenate([v[1:], last_v[None]])
+        deltas = r + cfg.gamma * v_next - v
+
+        def scan_fn(carry, delta):
+            adv = delta + cfg.gamma * cfg.gae_lambda * carry
+            return adv, adv
+
+        _, adv = jax.lax.scan(scan_fn, jnp.zeros(()), deltas, reverse=True)
+        returns = adv + v
+        return adv, returns
+
+    # -- update -------------------------------------------------------------
+
+    def update(self, state: TrainState, traj: Trajectory):
+        cfg = self.cfg
+        adv, returns = self.gae(traj)
+        if cfg.adv_norm:
+            adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+        def loss_fn(params):
+            logp = self.policy.logp(params["pi"], traj.obs, traj.action)
+            ratio = jnp.exp(logp - traj.logp)
+            surrogate = jnp.minimum(
+                ratio * adv,
+                jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps) * adv)
+            actor_loss = -jnp.mean(surrogate)                      # eq. (15)
+            v = self.value(params, traj.obs)
+            critic_loss = jnp.mean(jnp.square(v - returns))        # eq. (18)
+            ent = self.policy.entropy(params["pi"], traj.obs)
+            loss = (actor_loss + cfg.value_coef * critic_loss
+                    - cfg.entropy_coef * ent)
+            return loss, (actor_loss, critic_loss, ratio)
+
+        def epoch(carry, _):
+            st = carry
+            (loss, (al, cl, ratio)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(st.params)
+            new_params, new_opt = self._opt_update(grads, st.opt_state, st.params)
+            metrics = {
+                "loss": loss, "actor_loss": al, "critic_loss": cl,
+                "ratio_max": jnp.max(ratio),
+            }
+            return TrainState(new_params, new_opt), metrics
+
+        state, metrics = jax.lax.scan(epoch, state, None, length=cfg.epochs)
+        return state, jax.tree.map(lambda m: m[-1], metrics)

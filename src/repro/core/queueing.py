@@ -1,0 +1,95 @@
+"""Serial-queue E2E delay model (paper Sec. II-B, eqs. 1-4).
+
+All functions are pure, float32/float64-polymorphic, vectorized over UEs and
+jit/vmap-safe.  Units: seconds, Hz (cycles/s), bytes (converted to bits at the
+rate boundary), Watts.
+
+Stability (C7): every function that divides by ``mu - lam`` expects the caller
+to have enforced ``mu > lam`` (the environment projects partitioning actions
+onto the feasible set); a ``safe`` epsilon keeps gradients finite if violated
+transiently inside optimizer line searches.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def md1_sojourn(lam, mu):
+    """Average M/D/1 sojourn time (eq. 2): service 1/mu + queue wait.
+
+    T = 1/mu + lam / (2 mu (mu - lam)).
+    """
+    lam = jnp.asarray(lam)
+    mu = jnp.asarray(mu)
+    wait = lam / (2.0 * mu * jnp.maximum(mu - lam, _EPS))
+    return 1.0 / jnp.maximum(mu, _EPS) + wait
+
+
+def ue_sojourn(lam, f_ue, d_ue):
+    """Local sojourn delay (eq. 2) with mu = f_ue / d_ue.
+
+    ``d_ue = rho * sum_{l<=cut} M(l)`` is the per-task local cycle demand.
+    A zero local portion (cut == 0) contributes zero delay.
+    """
+    d_ue = jnp.asarray(d_ue)
+    mu = jnp.where(d_ue > 0, f_ue / jnp.maximum(d_ue, _EPS), jnp.inf)
+    return jnp.where(d_ue > 0, md1_sojourn(lam, mu), 0.0)
+
+
+def shannon_rate(alpha, w_hz, p_tx, gain, n0):
+    """FDMA uplink rate (Sec. II-B2): R = alpha W log2(1 + p h / (alpha W N0)).
+
+    ``alpha -> 0`` limits to 0 (handled explicitly so grads stay finite).
+    """
+    alpha = jnp.asarray(alpha)
+    snr = p_tx * gain / (jnp.maximum(alpha, _EPS) * w_hz * n0)
+    rate = alpha * w_hz * jnp.log2(1.0 + snr)
+    return jnp.where(alpha > 0, rate, 0.0)
+
+
+def trans_delay(psi_bytes, alpha, w_hz, p_tx, gain, n0):
+    """Transmission delay (eq. 3).  psi given in BYTES, rate in bits/s."""
+    bits = 8.0 * jnp.asarray(psi_bytes)
+    rate = shannon_rate(alpha, w_hz, p_tx, gain, n0)
+    return jnp.where(bits > 0, bits / jnp.maximum(rate, _EPS), 0.0)
+
+
+def es_sojourn(f_es, d_es):
+    """Edge sojourn (eq. 4): deterministic service, queuing neglected.
+
+    ``d_es = rho * sum_{l>cut} M(l)``; zero edge portion -> zero delay.
+    """
+    d_es = jnp.asarray(d_es)
+    return jnp.where(d_es > 0, d_es / jnp.maximum(f_es, _EPS), 0.0)
+
+
+def es_sojourn_gd1(lam, f_es, d_es, rho_ue):
+    """Beyond-paper: G/D/1-corrected edge sojourn following paper ref. [13].
+
+    The arrival process at the ES is the UE departure process; for an M/D/1
+    upstream with utilization ``rho_ue`` the departure SCV is
+    ``ca2 = 1 - rho_ue**2``.  Kingman's approximation with deterministic
+    service (cs2 = 0) gives  W ~= (ca2 / 2) * rho_es / (1 - rho_es) / mu_es.
+    """
+    d_es = jnp.asarray(d_es)
+    mu = jnp.where(d_es > 0, f_es / jnp.maximum(d_es, _EPS), jnp.inf)
+    rho_es = jnp.clip(lam / jnp.maximum(mu, _EPS), 0.0, 1.0 - 1e-6)
+    ca2 = 1.0 - jnp.clip(rho_ue, 0.0, 1.0) ** 2
+    wait = 0.5 * ca2 * rho_es / jnp.maximum(1.0 - rho_es, _EPS) / jnp.maximum(mu, _EPS)
+    return jnp.where(d_es > 0, 1.0 / jnp.maximum(mu, _EPS) + wait, 0.0)
+
+
+def e2e_delay(lam, f_ue, f_es, d_ue, d_es, psi_bytes, alpha, w_hz, p_tx, gain, n0,
+              edge_queueing: bool = False):
+    """End-to-end delay (eq. 1): T_ue + T_trans + T_es, per UE."""
+    t_ue = ue_sojourn(lam, f_ue, d_ue)
+    t_tx = trans_delay(psi_bytes, alpha, w_hz, p_tx, gain, n0)
+    if edge_queueing:
+        mu_ue = jnp.where(d_ue > 0, f_ue / jnp.maximum(d_ue, _EPS), jnp.inf)
+        rho_ue = jnp.where(jnp.isinf(mu_ue), 0.0, lam / jnp.maximum(mu_ue, _EPS))
+        t_es = es_sojourn_gd1(lam, f_es, d_es, rho_ue)
+    else:
+        t_es = es_sojourn(f_es, d_es)
+    return t_ue + t_tx + t_es, (t_ue, t_tx, t_es)

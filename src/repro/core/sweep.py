@@ -1,0 +1,86 @@
+"""Decoupled per-slot objective sweep over every (UE, cut) pair.
+
+This is the controller's dense hot spot: evaluating the drift-plus-penalty
+objective (eq. 11) for *all* candidate partitions at once.  It powers
+
+* the ``Oracle`` baseline (per-slot argmin over cuts),
+* PPO action-space pruning experiments,
+* and it is the reference semantics for the ``partition_sweep`` Pallas kernel
+  (``repro.kernels.partition_sweep`` computes the same table with in-VMEM
+  prefix scans; ``repro.kernels.ref`` wraps this function).
+
+Decoupling approximation: resources that couple UEs are split evenly
+(alpha = 1/N, f_es = f_max_es/N); f_ue is solved exactly per cell (P3).  The
+chosen cut is then re-evaluated with the exact convex allocators, so the
+approximation only affects the argmin, not reported metrics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import convex, energymem, queueing
+
+_BIG = 1e30
+
+
+def objective_table(*, prefix_macs, suffix_macs, psi, prefix_params,
+                    suffix_params, prefix_act_max, suffix_act_max, L,
+                    lam, gain, q_energy, q_memory,
+                    rho, kappa, p_tx, w_hz, n0, f_max_ue, f_max_es, v,
+                    gamma_ue, gamma_es, stability_margin=1e-3):
+    """Returns the (N, C) objective table; infeasible cells hold +BIG.
+
+    All table args are (N, C); lam/gain/q_* are (N,).
+    """
+    n, c = prefix_macs.shape
+    lam_ = lam[:, None]
+    gain_ = gain[:, None]
+    qe = q_energy[:, None]
+    qm = q_memory[:, None]
+
+    d_ue = rho * prefix_macs
+    d_es = rho * suffix_macs
+
+    # P3 per cell (broadcasts elementwise over the (N, C) grid).
+    f_ue = convex.solve_p3(qe, kappa, d_ue, lam_, v, f_max_ue,
+                           stability_margin=stability_margin)
+    # Even-split decoupling for the coupled resources.
+    alpha = jnp.where(psi > 0, 1.0 / n, 0.0)
+    f_es = jnp.where(d_es > 0, f_max_es / n, 0.0)
+
+    t_ue = queueing.ue_sojourn(lam_, f_ue, d_ue)
+    t_tx = queueing.trans_delay(psi, alpha, w_hz, p_tx, gain_, n0)
+    t_es = queueing.es_sojourn(f_es, d_es)
+    delay = t_ue + t_tx + t_es
+
+    energy = energymem.ue_energy(f_ue, d_ue, lam_, kappa, p_tx, t_tx)
+    mem = energymem.memory_cost(prefix_params, suffix_params,
+                                prefix_act_max, suffix_act_max,
+                                gamma_ue, gamma_es)
+
+    obj = qe * energy + qm * mem + v * delay
+
+    cuts = jnp.arange(c)[None, :]
+    feasible = (cuts <= L[:, None]) & (
+        d_ue * lam_ * (1.0 + stability_margin) < f_max_ue)
+    return jnp.where(feasible, obj, _BIG)
+
+
+def env_objective_table(env, state):
+    """Convenience wrapper binding an ``MecEnv``'s tables and scalars."""
+    cfg = env.cfg
+    return objective_table(
+        prefix_macs=env.prefix_macs, suffix_macs=env.suffix_macs, psi=env.psi,
+        prefix_params=env.prefix_params, suffix_params=env.suffix_params,
+        prefix_act_max=env.prefix_act_max, suffix_act_max=env.suffix_act_max,
+        L=env.L, lam=state.lam, gain=state.gain,
+        q_energy=state.queues.energy, q_memory=state.queues.memory,
+        rho=cfg.rho, kappa=cfg.kappa, p_tx=cfg.p_tx, w_hz=cfg.w_hz, n0=cfg.n0,
+        f_max_ue=cfg.f_max_ue, f_max_es=cfg.f_max_es, v=cfg.v,
+        gamma_ue=cfg.gamma_ue, gamma_es=cfg.gamma_es,
+        stability_margin=cfg.stability_margin)
+
+
+def oracle_cut(env, state):
+    """Per-slot decoupled-oracle partitioning decision."""
+    return jnp.argmin(env_objective_table(env, state), axis=1).astype(jnp.int32)

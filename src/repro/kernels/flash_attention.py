@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (GQA, causal/local/full).
+
+Grid (B, KV, nq, nk): each program handles one (batch, kv-head) pair, one
+query tile, one key tile; the last grid dim iterates sequentially so the
+online-softmax state (m, l, acc) lives in VMEM scratch across key tiles.
+Query heads sharing a kv head (G = H/KV) are folded into the tile's row
+dimension so the score matmul is a single (G*Qb, hd) x (hd, Kb) MXU op.
+
+Block skipping: key tiles strictly above the causal diagonal (or outside the
+sliding-window band) are skipped with @pl.when -- this is where the kernel
+beats the XLA reference path, which executes masked-out FLOPs (DESIGN §6).
+
+VMEM budget per program (f32): q tile G*Qb*hd + k/v tiles 2*Kb*hd + acc
+G*Qb*hd + stats 2*G*Qb  ~= 6 MB at G=8, Qb=Kb=512, hd=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            kind: str, window: int, q_block: int, k_block: int,
+            g: int, nk: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * q_block
+    k_start = ik * k_block
+    if kind == "causal":
+        relevant = k_start <= q_start + q_block - 1
+    elif kind == "local":
+        relevant = ((k_start <= q_start + q_block - 1)
+                    & (k_start + k_block - 1 > q_start - window))
+    else:
+        relevant = True
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].reshape(g * q_block, q_ref.shape[-1])
+        k = k_ref[0, 0]                        # (Kb, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            (((1,), (1,)), ((), ()))) * scale   # (G*Qb, Kb)
+        if kind != "full":
+            rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            q_pos = q_start + jax.lax.rem(rows, q_block)
+            k_pos = k_start + cols
+            mask = k_pos <= q_pos
+            if kind == "local":
+                mask = mask & (k_pos > q_pos - window)
+            s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v.astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())))
+        acc_ref[...] = alpha * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        out = (acc_ref[...] / l).reshape(1, 1, g, q_block, o_ref.shape[-1])
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, kind: str = "causal", window: int = 0,
+                           q_block: int = 512, k_block: int = 512,
+                           interpret: bool = False):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    q_block = min(q_block, sq)
+    k_block = min(k_block, sk)
+    assert sq % q_block == 0 and sk % k_block == 0, "pad seq to block multiple"
+    nq, nk = sq // q_block, sk // k_block
+
+    qr = q.reshape(b, sq, kv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,KV,G,Sq,hd)
+    kr = k.transpose(0, 2, 1, 3)                               # (B,KV,Sk,hd)
+    vr = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, kind=kind, window=window, q_block=q_block, k_block=k_block,
+        g=g, nk=nk, scale=1.0 / (hd ** 0.5))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, q_block, hd),
+                         lambda b_, k_, iq, ik: (b_, k_, 0, iq, 0)),
+            pl.BlockSpec((1, 1, k_block, hd),
+                         lambda b_, k_, iq, ik: (b_, k_, ik, 0)),
+            pl.BlockSpec((1, 1, k_block, hd),
+                         lambda b_, k_, iq, ik: (b_, k_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, q_block, hd),
+                               lambda b_, k_, iq, ik: (b_, k_, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * q_block, hd), jnp.float32),
+            pltpu.VMEM((g * q_block, 1), jnp.float32),
+            pltpu.VMEM((g * q_block, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)

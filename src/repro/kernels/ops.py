@@ -1,0 +1,95 @@
+"""Kernel entry points: jit-friendly wrappers that dispatch between the
+pure-jnp reference implementations (``repro.kernels.ref``) and the Pallas TPU
+kernels.
+
+Dispatch policy:
+* ``set_impl("pallas")`` / ``set_impl("reference")`` / ``set_impl("auto")``.
+* "auto" (default) picks Pallas on TPU backends and the reference elsewhere —
+  the CPU dry-run lowers the reference path (compute-identical HLO; a Mosaic
+  custom call cannot compile on the CPU backend), real-TPU runs lower Pallas.
+* Tests force "pallas" with interpret=True to validate kernel bodies on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+_IMPL = "auto"
+_INTERPRET = False
+
+
+def set_impl(impl: str, interpret: bool = False):
+    global _IMPL, _INTERPRET
+    assert impl in ("auto", "pallas", "reference")
+    _IMPL = impl
+    _INTERPRET = interpret
+
+
+def _pallas_active() -> bool:
+    if _IMPL == "reference":
+        return False
+    if _IMPL == "pallas":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+# Above this many score elements per (batch x head) the reference switches to
+# the blocked formulation (bounded memory; the flash kernel's blueprint).
+_BLOCKED_THRESHOLD = 2048 * 2048
+
+
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0):
+    """GQA attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd).
+    kind: "causal" | "local" (sliding window) | "full"."""
+    if _pallas_active():
+        from .flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, kind=kind, window=window,
+                                      interpret=_INTERPRET)
+    sq, sk = q.shape[1], k.shape[1]
+    if sq * sk <= _BLOCKED_THRESHOLD:
+        return ref.attention_ref(q, k, v,
+                                 mask=ref.build_mask(kind, sq, sk, window))
+    return ref.attention_blocked(q, k, v, kind=kind, window=window)
+
+
+def decode_attention(q, k, v, valid_mask):
+    """Single-token GQA attention. q (B,1,H,hd), k/v (B,S,KV,hd),
+    valid_mask (B,S) bool."""
+    if _pallas_active():
+        from .decode_attention import decode_attention_pallas
+        return decode_attention_pallas(q, k, v, valid_mask=valid_mask,
+                                       interpret=_INTERPRET)
+    return ref.decode_attention_ref(q, k, v, valid_mask=valid_mask)
+
+
+def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int):
+    """Mamba2 SSD. x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    if _pallas_active():
+        from .ssd_scan import ssd_scan_pallas
+        return ssd_scan_pallas(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                               interpret=_INTERPRET)
+    return ref.ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk=chunk)
+
+
+def rglru_scan(x, a, reset=None):
+    """Gated linear recurrence h_t = a_t * h_{t-1} + x_t.  x, a: (B,S,R)."""
+    if _pallas_active():
+        from .rglru_scan import rglru_scan_pallas
+        return rglru_scan_pallas(x, a, interpret=_INTERPRET)
+    return ref.rglru_scan_ref(x, a)
+
+
+def partition_sweep(macs, params_b, acts, psi, L, lam, gain, q_energy,
+                    q_memory, scalars):
+    """Per-(UE, cut) drift-plus-penalty objective table (paper eq. 11).
+    See repro.core.sweep for semantics; scalars is a dict of MEC constants."""
+    if _pallas_active():
+        from .partition_sweep import partition_sweep_pallas
+        return partition_sweep_pallas(macs, params_b, acts, psi, L, lam, gain,
+                                      q_energy, q_memory, scalars,
+                                      interpret=_INTERPRET)
+    return ref.partition_sweep_ref(macs, params_b, acts, psi, L, lam, gain,
+                                   q_energy, q_memory, scalars)

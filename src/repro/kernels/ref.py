@@ -1,0 +1,269 @@
+"""Pure-jnp oracles for every kernel (the reference semantics the Pallas
+kernels must reproduce; also the lowering path for the CPU dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def attention_ref(q, k, v, mask=None):
+    """GQA attention reference (dense scores; small shapes / kernel oracle).
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); mask broadcastable to (Sq, Sk).
+    Softmax in fp32; output in q.dtype; returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh                       # query heads per kv head
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / jnp.sqrt(hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :, :], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def build_mask(kind: str, sq: int, sk: int, window: int = 0):
+    """Dense mask for the small-path / oracle.  kind: causal|local|full."""
+    if kind == "full":
+        return None
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    if kind == "causal":
+        return kj <= qi
+    if kind == "local":
+        return (kj <= qi) & (kj > qi - window)
+    raise ValueError(kind)
+
+
+def attention_blocked(q, k, v, *, kind: str, window: int = 0,
+                      q_block: int = 0):
+    """Memory-bounded attention: scan over query blocks.
+
+    This is the lowering path for long sequences on every backend and the
+    exact semantic blueprint of the Pallas flash kernel: scores materialize
+    only as (B, KV, G, Qb, Sk') tiles.  "local" additionally slices a static
+    (window + Qb)-wide K/V band per query block, so sliding-window layers
+    execute band-linear FLOPs, not S^2 (DESIGN §6).
+
+    Per-block computation is rematerialized in the backward pass
+    (jax.checkpoint) so training memory stays O(S * d) + one tile.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = 1.0 / jnp.sqrt(hd)
+    if not q_block:
+        # keep the live (B,KV,G,Qb,Sk) f32 score tile ~1 GB
+        q_block = 512 if k.shape[1] < 16384 else 128
+    qb = min(q_block, s)
+    pad = (-s) % qb
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // qb
+    qtiles = q.reshape(b, nq, qb, h, hd).transpose(1, 0, 2, 3, 4)
+
+    sk = k.shape[1]
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    use_band = kind == "local" and window > 0 and window + qb < sk
+    band = min(window + qb, sk) if use_band else sk
+
+    def block(i, qt):
+        """One query tile: (B, qb, H, hd) against its K/V view."""
+        q_pos = i * qb + jnp.arange(qb)
+        if use_band:
+            start = jnp.clip(i * qb - window, 0, sk - band)
+            kt = jax.lax.dynamic_slice_in_dim(k32, start, band, axis=1)
+            vt = jax.lax.dynamic_slice_in_dim(v32, start, band, axis=1)
+            k_pos = start + jnp.arange(band)
+        else:
+            kt, vt = k32, v32
+            k_pos = jnp.arange(sk)
+        qg = qt.reshape(b, qb, kvh, g, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                            kt) * scale
+        if kind == "causal":
+            m = k_pos[None, :] <= q_pos[:, None]
+        elif kind == "local":
+            m = ((k_pos[None, :] <= q_pos[:, None])
+                 & (k_pos[None, :] > q_pos[:, None] - window))
+        else:
+            m = None
+        if m is not None:
+            scores = jnp.where(m[None, None, None], scores, _NEG)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vt)
+        return out.reshape(b, qb, h, hd).astype(q.dtype)
+
+    block = jax.checkpoint(block)
+
+    def body(_, inp):
+        i, qt = inp
+        return None, block(i, qt)
+
+    _, tiles = jax.lax.scan(body, None, (jnp.arange(nq), qtiles))
+    out = tiles.transpose(1, 0, 2, 3, 4).reshape(b, nq * qb, h, hd)
+    return out[:, :s]
+
+
+def decode_attention_ref(q, k, v, valid_mask):
+    """Single-token GQA attention vs a (possibly ring) cache.
+
+    q: (B, 1, H, hd); k, v: (B, S, KV, hd); valid_mask: (B, S) bool.
+    """
+    b, _, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    scale = 1.0 / jnp.sqrt(hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(valid_mask[:, None, None, :], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk: int):
+    """Mamba2 SSD (state-space dual) reference, chunked scan.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      softplus-activated step sizes (>0)
+    a_log: (H,)        log decay rate (A = -exp(a_log))
+    b, c: (B, S, G, N) input/output projections (G groups broadcast to H)
+    d_skip: (H,)       skip connection
+    Returns (y (B, S, H, P), final_state (B, H, N, P) fp32).
+
+    Semantics (per head h, state M in R^{N x P}):
+        M_t = exp(A_h dt_t) M_{t-1} + dt_t b_t x_t^T
+        y_t = c_t M_t + D_h x_t
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, "seq must be chunk-multiple"
+    reps = h // g
+    bh = jnp.repeat(b, reps, axis=2)     # (B,S,H,N)
+    ch = jnp.repeat(c, reps, axis=2)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))          # (H,)
+    dt32 = dt.astype(jnp.float32)
+    la = a[None, None, :] * dt32                     # (B,S,H) log decay/step
+
+    nchunks = s // chunk
+    xc = x.reshape(bsz, nchunks, chunk, h, p).astype(jnp.float32)
+    bc = bh.reshape(bsz, nchunks, chunk, h, n).astype(jnp.float32)
+    cc = ch.reshape(bsz, nchunks, chunk, h, n).astype(jnp.float32)
+    dtc = dt32.reshape(bsz, nchunks, chunk, h)
+    lac = la.reshape(bsz, nchunks, chunk, h)
+
+    # within-chunk cumulative log decays
+    cum = jnp.cumsum(lac, axis=2)                    # (B,C,Q,H)
+    total = cum[:, :, -1]                            # (B,C,H)
+
+    # intra-chunk (triangular) term: y_intra[q] = sum_{r<=q} decay(q,r) *
+    #   (c_q . b_r) dt_r x_r   with decay(q,r) = exp(cum_q - cum_r).
+    # The causal mask is applied in LOG domain: for r > q the exponent is
+    # positive and exp() overflows to inf before a post-hoc mask could zero
+    # it (inf * 0 = NaN).
+    scores = jnp.einsum("bcqhn,bcrhn->bchqr", cc, bc)
+    ldecay = (cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+              - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    ldecay = jnp.where(tri[None, None, None], ldecay, -jnp.inf)
+    w = scores * jnp.exp(ldecay)
+    y_intra = jnp.einsum("bchqr,bcrh,bcrhp->bcqhp", w, dtc, xc)
+
+    # chunk-boundary states: S_c = sum_r exp(total - cum_r) dt_r b_r x_r^T
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)        # (B,C,Q,H)
+    contrib = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchnp",
+                         decay_to_end, dtc, bc, xc)
+
+    def scan_fn(m_prev, inp):
+        contrib_c, total_c = inp
+        m_in = m_prev
+        m_out = m_in * jnp.exp(total_c)[..., None, None] + contrib_c
+        return m_out, m_in
+
+    m0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    contrib_t = contrib.transpose(1, 0, 2, 3, 4)     # (C,B,H,N,P)
+    total_t = total.transpose(1, 0, 2)               # (C,B,H)
+    m_final, m_starts = jax.lax.scan(scan_fn, m0, (contrib_t, total_t))
+    m_starts = m_starts.transpose(1, 0, 2, 3, 4)     # (B,C,H,N,P) state at chunk start
+
+    # inter-chunk term: y_inter[q] = exp(cum_q) c_q . M_start
+    y_inter = jnp.einsum("bcqh,bcqhn,bchnp->bcqhp",
+                         jnp.exp(cum), cc, m_starts)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), m_final
+
+
+def ssd_step_ref(state, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    """Single decode step of the SSD recurrence.
+
+    state: (B, H, N, P); x_t: (B, H, P); dt_t: (B, H); b_t/c_t: (B, G, N).
+    Returns (y_t (B, H, P), new_state).
+    """
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    reps = h // g
+    bh = jnp.repeat(b_t, reps, axis=1).astype(jnp.float32)   # (B,H,N)
+    ch = jnp.repeat(c_t, reps, axis=1).astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(a[None, :] * dt_t.astype(jnp.float32))   # (B,H)
+    x32 = x_t.astype(jnp.float32)
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhnp", dt_t.astype(jnp.float32), bh, x32))
+    y = jnp.einsum("bhnp,bhn->bhp", new_state, ch)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x32
+    return y.astype(x_t.dtype), new_state
+
+
+def rglru_scan_ref(x, a):
+    """Linear recurrence h_t = a_t * h_{t-1} + x_t via associative scan.
+
+    x, a: (B, S, R) with a in (0, 1).  Returns h: (B, S, R).
+    """
+    def combine(left, right):
+        a_l, x_l = left
+        a_r, x_r = right
+        return a_l * a_r, x_l * a_r + x_r
+
+    a32, x32 = a.astype(jnp.float32), x.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (a32, x32), axis=1)
+    return h.astype(x.dtype)
+
+
+def partition_sweep_ref(macs, params_b, acts, psi, L, lam, gain, q_energy,
+                        q_memory, scalars):
+    """Reference for the partition-sweep kernel: builds the prefix tables
+    from RAW per-layer arrays, then delegates to repro.core.sweep."""
+    from ..core import sweep
+
+    prefix_macs = jnp.cumsum(macs, axis=1)
+    prefix_params = jnp.cumsum(params_b, axis=1)
+    suffix_macs = prefix_macs[:, -1:] - prefix_macs
+    suffix_params = prefix_params[:, -1:] - prefix_params
+    c = macs.shape[1]
+    idx = jnp.arange(c)[None, :]
+    acts_r = jnp.where(idx <= L[:, None], acts, 0.0)
+    acts_masked = jnp.where(idx >= 1, acts_r, 0.0)
+    prefix_act_max = jax.lax.associative_scan(jnp.maximum, acts_masked, axis=1)
+    rev = jnp.flip(jnp.where(idx >= 1, acts_r, 0.0), axis=1)
+    suffix_inc = jnp.flip(jax.lax.associative_scan(jnp.maximum, rev, axis=1), axis=1)
+    suffix_act_max = jnp.concatenate(
+        [suffix_inc[:, 1:], jnp.zeros((macs.shape[0], 1), macs.dtype)], axis=1)
+    return sweep.objective_table(
+        prefix_macs=prefix_macs, suffix_macs=suffix_macs, psi=psi,
+        prefix_params=prefix_params, suffix_params=suffix_params,
+        prefix_act_max=prefix_act_max, suffix_act_max=suffix_act_max,
+        L=L, lam=lam, gain=gain, q_energy=q_energy, q_memory=q_memory,
+        **scalars)

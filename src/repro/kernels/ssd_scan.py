@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space dual) chunked scan.
+
+Grid (B, H, nchunks): the last dim iterates chunks sequentially per
+(batch, head); the running state M (N x P) lives in VMEM scratch across
+chunk iterations — exactly the TPU-native reformulation of the SSD
+recurrence: per chunk, the quadratic "attention-like" intra-chunk term is
+two MXU matmuls (C·B^T weighted tri-matmul against X), and the inter-chunk
+term applies the carried state.  This adapts Mamba2's GPU kernel (warp-level
+scans) to the TPU memory hierarchy: chunk tiles in VMEM, state in VMEM
+scratch, MXU for all O(Q^2)/O(QN) contractions (DESIGN §3/§6).
+
+Semantics == repro.kernels.ref.ssd_scan_ref (the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref,
+            y_ref, state_out_ref, m_ref, *, nchunks: int, chunk: int):
+    ic = pl.program_id(2)
+    ih = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)         # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)       # (Q, 1) -> column
+    bmat = b_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))   # scalar A_h
+    d = dskip_ref[0].astype(jnp.float32)
+
+    la = a * dt                                  # (Q,1) log decay per step
+    cum = jnp.cumsum(la, axis=0)                 # (Q,1)
+    total = cum[chunk - 1:chunk, :]              # (1,1)
+
+    # intra-chunk triangular term (log-domain masked decay)
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))  # (Q,Q)
+    ldecay = cum - cum.T                         # (Q,Q) = cum_q - cum_r
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ldecay = jnp.where(cols <= rows, ldecay, -jnp.inf)
+    w = scores * jnp.exp(ldecay)                 # (Q,Q)
+    xdt = x * dt                                 # (Q,P)
+    y_intra = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())))
+
+    # inter-chunk term from carried state M (N,P)
+    y_inter = jnp.exp(cum) * jax.lax.dot_general(
+        cmat, m_ref[...], (((1,), (0,)), ((), ())))
+
+    y_ref[...] = ((y_intra + y_inter + d * x)[None, None]).astype(y_ref.dtype)
+
+    # state update: M <- exp(total) M + sum_r exp(total-cum_r) dt_r b_r x_r^T
+    decay_to_end = jnp.exp(total - cum)          # (Q,1)
+    contrib = jax.lax.dot_general(bmat * (decay_to_end * dt), x,
+                                  (((0,), (0,)), ((), ())))   # (N,P)
+    m_ref[...] = m_ref[...] * jnp.exp(total) + contrib
+
+    @pl.when(ic == nchunks - 1)
+    def _finish():
+        state_out_ref[...] = m_ref[...][None, None]
+
+
+def ssd_scan_pallas(x, dt, a_log, b, c, d_skip, *, chunk: int,
+                    interpret: bool = False):
+    """x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,G,N), d_skip (H,).
+    Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0
+    nchunks = s // chunk
+    reps = h // g
+    bh = jnp.repeat(b, reps, axis=2)
+    ch = jnp.repeat(c, reps, axis=2)
+
+    xr = x.transpose(0, 2, 1, 3)          # (B,H,S,P)
+    dtr = dt.transpose(0, 2, 1)[..., None]  # (B,H,S,1)
+    br = bh.transpose(0, 2, 1, 3)
+    cr = ch.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, nchunks=nchunks, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, a_log, br, cr, d_skip)
+    return y.transpose(0, 2, 1, 3), state

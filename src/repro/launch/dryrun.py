@@ -1,0 +1,362 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) cell against the
+production meshes -- (16,16) single-pod and (2,16,16) multi-pod -- and
+records memory analysis, cost analysis, and the HLO collective schedule for
+the roofline (deliverable g).
+
+The two lines above MUST precede any jax import: jax locks the device count
+on first init, and only the dry-run sees 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/out/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs.base import get_config, load_all
+from ..models.steps import make_train_step
+from ..models import transformer
+from . import sharding, specs
+from .mesh import make_production_mesh
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-bytes accounting
+# ---------------------------------------------------------------------------
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of one HLO shape literal like 'bf16[16,4096,128]{2,1,0}'."""
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\]", sig)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _result_bytes(line: str) -> int:
+    """Sum the result-shape bytes of one HLO op line (handles tuples)."""
+    m = re.search(r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+\S", line)
+    if not m:
+        return 0
+    sig = m.group(1)
+    return sum(_shape_bytes(s) for s in
+               re.findall(r"[a-z0-9]+\[[\d,]*\]", sig))
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into computation blocks.  Returns
+    {comp_name: [op lines]} plus the entry computation name."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(ENTRY\s+)?%([\w.\-]+)\s*\(", s)
+        if m and s.endswith("{") and "->" in s:
+            current = m.group(2)
+            comps[current] = []
+            if m.group(1):
+                entry = current
+            continue
+        if current is not None:
+            comps[current].append(s)
+    return comps, entry
+
+
+def collective_bytes(hlo_text: str, loop_trips: list) -> dict:
+    """Per-kind collective bytes with loop-nesting-aware trip counts.
+
+    ``loop_trips[d]`` is the trip count assigned to while-loop bodies at
+    nesting depth d (0 = loops in ENTRY).  For the programs here the loop
+    structure is known statically: train = [microbatches, n_units, ...],
+    serve = [n_units, ...]; deeper loops (blocked-attention scans) carry no
+    collectives and default to 1.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    # map: body computation -> (parent computation) via while ops
+    while_bodies: dict[str, str] = {}
+    called: dict[str, set] = {c: set() for c in comps}
+    for cname, lines in comps.items():
+        for s in lines:
+            for attr in ("body", "to_apply", "true_computation",
+                         "false_computation", "branch_computations",
+                         "called_computations", "calls"):
+                for m in re.finditer(attr + r"=\{?%?([\w.\-]+)", s):
+                    tgt = m.group(1)
+                    if tgt in comps:
+                        if attr == "body":
+                            while_bodies[tgt] = cname
+                        else:
+                            called[cname].add(tgt)
+
+    # effective multiplier per computation (BFS from entry)
+    mult: dict[str, float] = {}
+
+    def assign(c, m, depth):
+        if c in mult and mult[c] >= m:
+            return
+        mult[c] = m
+        for tgt in called.get(c, ()):   # same-depth calls (fusions, conds)
+            assign(tgt, m, depth)
+        for body, parent in while_bodies.items():
+            if parent == c:
+                trip = loop_trips[depth] if depth < len(loop_trips) else 1
+                assign(body, m * trip, depth + 1)
+
+    if entry:
+        assign(entry, 1.0, 0)
+
+    per_kind = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    f32_bytes = 0.0
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0)
+        for s in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"\b{kind}(-start)?\(", s):
+                    if f"{kind}-done" in s:
+                        continue
+                    b = _result_bytes(s)
+                    per_kind[kind] += b * m
+                    counts[kind] += int(m)
+                    if re.search(r"=\s+\(?f32\[", s):
+                        f32_bytes += b * m
+                    break
+    total = float(sum(per_kind.values()))
+    # XLA:CPU upcasts bf16 compute to f32, dragging collectives to f32 with
+    # it; TPU lowering keeps bf16 on the wire.  The corrected figure halves
+    # f32 collective bytes (approximation: genuine f32 reductions -- logits,
+    # fp32 grads -- are a small minority in these bf16 models).
+    return {"bytes_by_kind": per_kind,
+            "ops_by_kind": counts,
+            "total_bytes": total,
+            "f32_bytes": float(f32_bytes),
+            "bf16_wire_corrected_bytes": float(total - 0.5 * f32_bytes)}
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def build_step(cfg, shape: specs.ShapeSpec,
+               opts: sharding.ShardingOptions = sharding.BASELINE):
+    """Returns (fn, arg_specs_tuple, donate) for the cell's step program."""
+    cell = specs.input_specs(cfg, shape.name)
+    if shape.kind == "train":
+        from ..models.steps import default_microbatches
+        mb = opts.microbatches or default_microbatches(cfg, shape.batch)
+        _, train_step = make_train_step(cfg, microbatches=mb)
+        return (train_step,
+                (cell["params"], cell["opt_state"], cell["batch"]), (0, 1))
+    if shape.kind == "prefill":
+        s_max = ((shape.seq // 4 if cfg.enc_layers else shape.seq)
+                 + specs.DECODE_MARGIN)
+
+        def prefill_step(params, batch):
+            return transformer.prefill(params, cfg, batch, s_max=s_max)
+        return prefill_step, (cell["params"], cell["batch"]), ()
+
+    def serve_step(params, cache, tokens):
+        return transformer.decode_step(params, cfg, cache, tokens)
+    return serve_step, (cell["params"], cell["cache"], cell["tokens"]), (1,)
+
+
+def arg_shardings(mesh, cfg, shape: specs.ShapeSpec, args,
+                  opts: sharding.ShardingOptions = sharding.BASELINE):
+    if shape.kind == "train":
+        params_sh = sharding.params_shardings(mesh, cfg, args[0], opts)
+        opt_sh = _opt_shardings(mesh, cfg, args[1], opts)
+        batch_sh = sharding.batch_shardings(mesh, cfg, args[2])
+        return (params_sh, opt_sh, batch_sh)
+    if shape.kind == "prefill":
+        return (sharding.params_shardings(mesh, cfg, args[0], opts),
+                sharding.batch_shardings(mesh, cfg, args[1]))
+    return (sharding.params_shardings(mesh, cfg, args[0], opts),
+            sharding.cache_shardings(mesh, cfg, args[1], batch=shape.batch),
+            sharding.replicated(mesh, args[2]))
+
+
+def _opt_shardings(mesh, cfg, opt_spec,
+                   opts: sharding.ShardingOptions = sharding.BASELINE):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mu = sharding.params_shardings(mesh, cfg, opt_spec.mu, opts)
+    nu = sharding.params_shardings(mesh, cfg, opt_spec.nu, opts)
+    return type(opt_spec)(step=NamedSharding(mesh, P()), mu=mu, nu=nu)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opts: sharding.ShardingOptions = sharding.BASELINE) -> dict:
+    cfg = get_config(arch)
+    shape = specs.SHAPES[shape_name]
+    ok, reason = specs.cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, donate = build_step(cfg, shape, opts)
+    shardings_in = arg_shardings(mesh, cfg, shape, args, opts)
+
+    out_shardings = None
+    if shape.kind == "prefill":
+        # the cache leaves prefill in the decode pipeline's layout
+        # (seq over "model" for small kv-head counts) instead of occupying
+        # ~11 GB/device batch-sharded.
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        _, cache_spec = jax.eval_shape(fn, *args)
+        cache_sh = sharding.cache_shardings(mesh, cfg, cache_spec,
+                                            batch=shape.batch)
+        out_shardings = (NamedSharding(mesh, P()), cache_sh)
+
+    from ..shardctx import activation_sharding
+    moe_dp = not (opts.expert_shard_dff or opts.expert_mesh == "data")
+    with mesh, activation_sharding(mesh, seq_shard=opts.seq_shard,
+                                   moe_dp_groups=moe_dp,
+                                   remat_offload=opts.remat_offload,
+                                   expert_axis=opts.expert_mesh):
+        jitted = jax.jit(fn, in_shardings=shardings_in,
+                         donate_argnums=donate,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        } if mem is not None else None
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost_info = {k: float(v) for k, v in cost.items()
+                     if np.isscalar(v) and k in
+                     ("flops", "bytes accessed", "transcendentals",
+                      "utilization operand 0 {}", "bytes accessed output {}")}
+        flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:
+        cost_info, flops, bytes_accessed = {"error": str(e)}, 0.0, 0.0
+
+    if shape.kind == "train":
+        from ..models.steps import default_microbatches
+        mb = opts.microbatches or default_microbatches(cfg, shape.batch)
+        loop_trips = [mb, cfg.n_units, 1] if mb > 1 else [cfg.n_units, 1]
+    else:
+        loop_trips = [cfg.n_units, 1]
+    coll = collective_bytes(compiled.as_text(), loop_trips=loop_trips)
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": int(np.prod(mesh.devices.shape)),
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_info,
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "cost_raw": cost_info,
+        "collectives": coll,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(specs.SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="benchmarks/out/dryrun")
+    # §Perf hillclimb knobs
+    ap.add_argument("--tp-mode", default="full",
+                    choices=["full", "vocab-only", "moe-only"])
+    ap.add_argument("--expert-dff", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--fsdp", type=int, default=None, choices=[0, 1],
+                    help="force ZeRO-3 on/off (default: per-arch cfg)")
+    ap.add_argument("--offload", action="store_true",
+                    help="host-offload remat carry stacks")
+    ap.add_argument("--expert-mesh", default="model", choices=["model", "data"])
+    ap.add_argument("--recommended", action="store_true",
+                    help="per-arch beyond-paper defaults (sharding.recommended_options)")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+    opts = sharding.ShardingOptions(
+        tp_mode=args.tp_mode, expert_shard_dff=args.expert_dff,
+        seq_shard=args.seq_shard, microbatches=args.microbatches,
+        fsdp_override=None if args.fsdp is None else bool(args.fsdp),
+        remat_offload=args.offload, expert_mesh=args.expert_mesh)
+
+    archs = sorted(load_all()) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(specs.SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip-existing] {tag}", flush=True)
+                    continue
+                print(f"[run] {tag}", flush=True)
+                try:
+                    cell_opts = opts
+                    if args.recommended:
+                        cell_opts = sharding.recommended_options(
+                            get_config(arch), specs.SHAPES[shape_name].kind)
+                    result = run_cell(arch, shape_name, multi, cell_opts)
+                except Exception:
+                    result = {"arch": arch, "shape": shape_name,
+                              "mesh": "multi" if multi else "single",
+                              "status": "error",
+                              "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=1)
+                status = result["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" flops={result['flops']:.3e}"
+                             f" coll={result['collectives']['total_bytes']:.3e}B"
+                             f" compile={result['compile_s']}s")
+                print(f"[done] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction (MULTI-POD DRY-RUN spec).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count locks on first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke runs of the same launch code."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch (DP): ("pod","data") when present."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def elastic_mesh(target_model: int = 16):
+    """Elastic variant: builds the largest (data, model) mesh the *live*
+    device set supports -- used by the runtime's restart-after-failure path
+    (runtime/elastic.py).  model axis shrinks only if devices < target."""
+    n = len(jax.devices())
+    model = min(target_model, n)
+    while n % model:
+        model -= 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

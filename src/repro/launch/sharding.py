@@ -1,0 +1,268 @@
+"""Sharding policy: logical-axis rules -> PartitionSpecs for every leaf.
+
+Policy (DESIGN §5):
+  * batch                -> all DP axes ("pod","data")
+  * attention heads, FFN hidden, vocab, experts  -> "model" (TP / EP)
+  * params + optimizer moments additionally over "data" (FSDP/ZeRO-3) when
+    ``cfg.fsdp`` (the >=27B archs) — with experts keeping E on "model" and
+    FSDP applied to their d_model axis so a scanned unit's transient
+    all-gather stays bounded
+  * KV caches: batch -> "data", kv-heads -> "model" when divisible, else the
+    *sequence* axis -> "model" (the long-cache decode cells)
+  * anything non-divisible by the mesh axis stays replicated (e.g. gemma3's
+    4 query heads on a 16-way model axis)
+
+Rules are path-pattern driven so they apply uniformly to the stacked
+block-scan params, the tail layers, and the optimizer state (which mirrors
+the param tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOptions:
+    """Hillclimb knobs (EXPERIMENTS.md §Perf).  Defaults = the paper-faithful
+    baseline (naive TP x DP everywhere)."""
+
+    tp_mode: str = "full"          # "full" | "vocab-only" | "moe-only"
+    expert_shard_dff: bool = False  # experts: shard F over data (keep EP resident)
+    seq_shard: bool = False        # context parallelism: activations S -> model
+    microbatches: int | None = None  # override models.steps.default_microbatches
+    fsdp_override: bool | None = None  # force ZeRO-3 on/off (None = per-arch cfg)
+    remat_offload: bool = False    # host-offload the remat carry stacks
+    expert_mesh: str = "model"     # expert-parallel axis: "model" | "data"
+                                   # ("data" => tokens a2a over data, expert
+                                   #  F over model: fully-resident weights)
+
+
+BASELINE = ShardingOptions()
+
+
+def recommended_options(cfg, shape_kind: str) -> ShardingOptions:
+    """Beyond-paper defaults distilled from the §Perf hillclimb AND the
+    framework-wide measurement pass (EXPERIMENTS.md §Perf "global policy";
+    first-draft recipes that regressed cells were reverted per-family):
+
+    * decode: ALWAYS baseline TP — ZeRO'd weights re-gather the whole model
+      every token (measured 10-30x regressions); TP keeps weights resident.
+    * MoE: resident-expert layout only when expert params dominate
+      (llama4: 16 B/layer yes; moonshot: 0.55 B/layer no — token gathers
+      outweigh weight movement there).
+    * enc-dec (seamless): baseline for TRAIN (the 4k-frame encoder's bwd
+      favors TP; pure-DP regressed 5x) but pure-DP for prefill (2.9x win).
+    * <8B dense/ssm/hybrid train+prefill: pure-DP layers + ZeRO over data,
+      mb=2 for train (cell A).
+    * >=90B dense: train keeps TP (d >= 8k amortizes); prefill pure-DP +
+      ZeRO-2D (cell C).
+    """
+    from ..profiling.roofline import param_count
+    if shape_kind == "decode":
+        return BASELINE
+    if cfg.n_experts:
+        expert_params = cfg.n_experts * (3 if cfg.gated_ffn else 2)             * cfg.d_model * cfg.resolved_moe_dff
+        if expert_params * 2 > 8e9:        # bytes: resident layout pays off
+            return ShardingOptions(
+                tp_mode="moe-only", expert_shard_dff=True, remat_offload=True,
+                microbatches=4 if shape_kind == "train" else None)
+        return BASELINE
+    if cfg.enc_layers and shape_kind == "train":
+        return BASELINE
+    n = param_count(cfg)
+    if n < 8e9:
+        return ShardingOptions(tp_mode="vocab-only", fsdp_override=True,
+                               microbatches=2 if shape_kind == "train" else None)
+    if shape_kind == "prefill":
+        return ShardingOptions(tp_mode="vocab-only", fsdp_override=True)
+    return ShardingOptions(microbatches=8)   # big-dense training: baseline TP
+
+
+def _axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _shard_if(mesh, dim: int, axis):
+    """Use ``axis`` (a mesh axis name or tuple of names) only if the dim
+    divides evenly (GSPMD could pad, but we keep shardings exact so memory
+    analysis is honest)."""
+    if axis is None:
+        return None
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return None
+        n *= _axis_size(mesh, a)
+    if dim % n != 0:
+        return None
+    return axis if isinstance(axis, str) else tuple(axes)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))   # GetAttrKey (NamedTuple fields)
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(mesh, cfg, path: str, shape: tuple,
+               opts: ShardingOptions = BASELINE) -> P:
+    """PartitionSpec for one parameter identified by its tree path."""
+    use_fsdp = cfg.fsdp if opts.fsdp_override is None else opts.fsdp_override
+    fsdp = "data" if (use_fsdp and "data" in mesh.axis_names) else None
+    stacked = bool(re.search(r"units/slot\d+", path)) and len(shape) >= 1
+    lead: tuple = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        return P(*lead, *axes)
+
+    name = path.rsplit("/", 1)[-1]
+    layer_tp = opts.tp_mode == "full"        # TP on layer weights?
+    moe_tp = opts.tp_mode in ("full", "moe-only")
+
+
+    if name == "embed" or path.endswith("embed"):
+        return P(_shard_if(mesh, shape[0], "model"),
+                 _shard_if(mesh, shape[1], fsdp) if fsdp else None)
+    if name == "head":
+        return P(_shard_if(mesh, shape[0], fsdp) if fsdp else None,
+                 _shard_if(mesh, shape[1], "model"))
+
+    # Without layer TP, ZeRO-3 *storage* for layer weights can use BOTH axes
+    # (256-way; vocab tensors above keep "model" for their vocab dim):
+    if fsdp and not layer_tp:
+        fsdp = ("data", "model")
+
+    if len(body) == 0:
+        return spec()
+    # MoE expert tensors: (E, D, F) / (E, F, D) -- E on the expert axis
+    if name in ("wi", "wg") and len(body) == 3:
+        if opts.expert_mesh == "data":   # EP over data, F over model: resident
+            return spec(_shard_if(mesh, body[0], "data"), None,
+                        _shard_if(mesh, body[2], "model"))
+        e_ax = _shard_if(mesh, body[0], "model") if moe_tp else None
+        if opts.expert_shard_dff:   # keep weights resident, shard F over data
+            return spec(e_ax, None, _shard_if(mesh, body[2], "data"))
+        return spec(e_ax,
+                    _shard_if(mesh, body[1], fsdp) if fsdp else None, None)
+    if name == "wo" and len(body) == 3:
+        if opts.expert_mesh == "data":
+            return spec(_shard_if(mesh, body[0], "data"),
+                        _shard_if(mesh, body[1], "model"), None)
+        e_ax = _shard_if(mesh, body[0], "model") if moe_tp else None
+        if opts.expert_shard_dff:
+            return spec(e_ax, _shard_if(mesh, body[1], "data"), None)
+        return spec(e_ax, None,
+                    _shard_if(mesh, body[2], fsdp) if fsdp else None)
+    if name == "router":
+        return spec(_shard_if(mesh, body[0], fsdp) if fsdp else None, None)
+
+    # attention / dense FFN 2D weights
+    if name in ("wq", "wk", "wv", "w1", "w3", "w_x", "w_gate", "in_proj"):
+        return spec(_shard_if(mesh, body[0], fsdp) if fsdp else None,
+                    _shard_if(mesh, body[1], "model") if layer_tp else None)
+    if name in ("wo", "w2", "w_out", "out_proj"):
+        return spec(_shard_if(mesh, body[0], "model") if layer_tp else None,
+                    _shard_if(mesh, body[1], fsdp) if fsdp else None)
+    if name in ("w_r", "w_i"):   # RG-LRU channel-coupling gates
+        return spec(None, _shard_if(mesh, body[1], "model") if layer_tp else None)
+    if name in ("bq", "bk", "bv"):
+        return spec(_shard_if(mesh, body[0], "model") if layer_tp else None)
+    if name == "conv":
+        return spec(None, _shard_if(mesh, body[1], "model") if layer_tp else None)
+    if name in ("lam", "a_log", "dt_bias", "d_skip"):
+        return spec(_shard_if(mesh, body[0], "model") if layer_tp else None)
+    # norms / scalars / anything else: replicated (beyond the stack axis)
+    return spec(*([None] * len(body)))
+
+
+def params_shardings(mesh, cfg, params_shape: Any,
+                     opts: ShardingOptions = BASELINE):
+    """Map a params (or optimizer-moment) shape-pytree to NamedShardings."""
+    def fn(path, leaf):
+        spec = param_spec(mesh, cfg, _path_str(path), leaf.shape, opts)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def batch_shardings(mesh, cfg, batch_shape: Any, *, shard_batch=True):
+    """Token/embedding inputs: batch over all DP axes (when divisible)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def fn(path, leaf):
+        if not shard_batch or leaf.shape[0] % _mesh_prod(mesh, dp) != 0:
+            return NamedSharding(mesh, P())
+        rest = [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(dp, *rest))
+    return jax.tree.map(lambda l: fn(None, l), batch_shape)
+
+
+def _mesh_prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def cache_shardings(mesh, cfg, cache_shape: Any, batch: int):
+    """Serving-cache shardings.
+
+    KV tensors are (units, B, S, KV, hd) (stacked) or (B, S, KV, hd) (tail).
+    batch shards over DP when divisible; otherwise (long_500k, B=1) the
+    SEQUENCE axis shards over "data".  kv-heads shard over "model" when
+    divisible; for kv-head counts < model size the sequence axis takes
+    "model" instead (the 1.37TB qwen110 decode cache needs 256-way sharding).
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = _mesh_prod(mesh, dp)
+
+    def fn(path, leaf):
+        shape = leaf.shape
+        p = _path_str(path)
+        if leaf.ndim >= 4 and ("/k" in p or "/v" in p or p.endswith("k")
+                               or p.endswith("v")):
+            stacked = leaf.ndim == 5
+            lead = (None,) if stacked else ()
+            b, s, kv, hd = shape[-4:]
+            batch_ax = dp if b % dp_n == 0 else None
+            seq_ax = None
+            kv_ax = _shard_if(mesh, kv, "model")
+            if kv_ax is None:
+                seq_ax = _shard_if(mesh, s, "model")
+            if batch_ax is None and seq_ax is None:
+                seq_ax = _shard_if(mesh, s, "data")
+            elif batch_ax is None:
+                # combine: seq carries model; nothing else shardable
+                pass
+            return NamedSharding(mesh, P(*lead, batch_ax, seq_ax, kv_ax, None))
+        if leaf.ndim >= 2 and shape[-2 if leaf.ndim > 2 else 0] == batch:
+            pass
+        # recurrent states / conv tails / positions: shard batch when possible
+        stacked_lead = (None,) if leaf.ndim >= 1 and leaf.shape[0] not in (batch,) else ()
+        for i, dim in enumerate(shape):
+            if dim == batch and batch % dp_n == 0:
+                spec = [None] * leaf.ndim
+                spec[i] = dp
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(fn, cache_shape)
+
+
+def replicated(mesh, tree: Any):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,106 @@
+"""Assigned input-shape table + ShapeDtypeStruct builders (deliverables e/f).
+
+``input_specs(cfg, shape_name)`` returns weak-type-correct, shardable,
+allocation-free stand-ins for every model input of that cell, exactly like
+the dry-run requires.  Decode cells derive their cache specs via
+``jax.eval_shape`` over the prefill path (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import transformer
+from ..models.common import dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# decode cells write at pos=seq; cache holds seq+margin.  128 keeps the
+# padded cache length divisible by the 16-way mesh axes (32768+128 = 32896
+# = 16*2056) so sequence-sharded caches stay exact.
+DECODE_MARGIN = 128
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """DESIGN §4 skip rules.  Returns (supported, reason_if_not)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full attention; 512k-KV decode needs "
+                       "sub-quadratic structure (DESIGN §4)")
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, *, train: bool) -> dict:
+    """Token/embedding ShapeDtypeStructs for train or prefill."""
+    cdt = dtype_of(cfg.compute_dtype)
+    seq = shape.seq
+    dec_seq = seq // 4 if cfg.enc_layers else seq
+    out = {"tokens": sds((shape.batch, dec_seq), jnp.int32)}
+    if train:
+        out["targets"] = sds((shape.batch, dec_seq), jnp.int32)
+    if cfg.frontend == "vision":
+        out["image_embeds"] = sds(
+            (shape.batch, cfg.n_frontend_tokens, cfg.d_model), cdt)
+    if cfg.enc_layers:
+        out["src_embeds"] = sds((shape.batch, seq, cfg.d_model), cdt)
+    return out
+
+
+def params_specs(cfg: ArchConfig) -> dict:
+    """Abstract parameter tree (no allocation) via eval_shape over init."""
+    return jax.eval_shape(
+        functools.partial(transformer.init_params, cfg=cfg),
+        jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract serving cache for a ``seq``-length context (no allocation)."""
+    params = params_specs(cfg)
+    prompt = batch_specs(cfg, shape, train=False)
+    s_max = (shape.seq // 4 if cfg.enc_layers else shape.seq) + DECODE_MARGIN
+
+    def run(p, b):
+        return transformer.prefill(p, cfg, b, s_max=s_max)
+
+    _, cache = jax.eval_shape(run, params, prompt)
+    return cache
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Everything the lowered step consumes, as ShapeDtypeStructs."""
+    shape = SHAPES[shape_name]
+    params = params_specs(cfg)
+    if shape.kind == "train":
+        from ..models.steps import make_train_step
+        opt_init, _ = make_train_step(cfg)
+        opt = jax.eval_shape(opt_init, params)
+        return {"params": params, "opt_state": opt,
+                "batch": batch_specs(cfg, shape, train=True)}
+    if shape.kind == "prefill":
+        return {"params": params,
+                "batch": batch_specs(cfg, shape, train=False)}
+    # decode
+    return {"params": params,
+            "cache": cache_specs(cfg, shape),
+            "tokens": sds((shape.batch,), jnp.int32)}

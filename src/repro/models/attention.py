@@ -1,0 +1,189 @@
+"""GQA attention: init + train/prefill/decode paths, KV + ring-buffer caches.
+
+The dense softmax path here is the *reference* implementation; on TPU the
+Pallas kernels (``repro.kernels.ops.flash_attention`` / ``decode_attention``)
+replace the inner computation — see ``repro.kernels.ops.use_pallas``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (causal_mask, dense_init, head_rms_norm, local_mask, rope)
+
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    """Global-attention cache: full-length K/V plus the write position."""
+    k: jax.Array   # (B, S_max, KV, hd)
+    v: jax.Array
+
+
+class RingCache(NamedTuple):
+    """Sliding-window cache: fixed ``window`` slots + absolute positions."""
+    k: jax.Array       # (B, W, KV, hd)
+    v: jax.Array
+    pos: jax.Array     # (B, W) int32 absolute position of each slot, -1 empty
+
+
+def init_attention(key, cfg, *, cross: bool = False, prefix: str = ""):
+    """Parameters for one attention sub-block (self or cross)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    dt = _pdtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dt),
+        "wk": dense_init(ks[1], (d, kv * hd), dt),
+        "wv": dense_init(ks[2], (d, kv * hd), dt),
+        "wo": dense_init(ks[3], (h * hd, d), dt, scale=1.0 / jnp.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _pdtype(cfg):
+    from .common import dtype_of
+    return dtype_of(cfg.param_dtype)
+
+
+def _project_q(p, cfg, x):
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(*x.shape[:-1], h, hd)
+    if "q_norm" in p:
+        q = head_rms_norm(q, p["q_norm"])
+    return q
+
+
+def _project_kv(p, cfg, x):
+    kv, hd = cfg.n_kv, cfg.resolved_head_dim
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(*x.shape[:-1], kv, hd)
+    v = v.reshape(*x.shape[:-1], kv, hd)
+    if "k_norm" in p:
+        k = head_rms_norm(k, p["k_norm"])
+    return k, v
+
+
+def self_attention(p, cfg, x, positions, *, kind: str):
+    """Train/prefill full-sequence self-attention.  kind: g|l|e."""
+    from ..kernels import ops
+    q = _project_q(p, cfg, x)
+    k, v = _project_kv(p, cfg, x)
+    if cfg.rope_theta and kind != "e_nopos":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    akind = {"l": "local", "e": "full"}.get(kind, "causal")
+    out = ops.flash_attention(q, k, v, kind=akind, window=cfg.window)
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"], (k, v)
+
+
+def cross_attention(p, cfg, x, context_kv):
+    """Cross-attention against precomputed context K/V (no RoPE)."""
+    from ..kernels import ops
+    q = _project_q(p, cfg, x)
+    k, v = context_kv
+    out = ops.flash_attention(q, k, v, kind="full")
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"]
+
+
+def context_kv(p, cfg, context):
+    """Precompute cross-attention K/V from context embeddings (prefill)."""
+    return _project_kv(p, cfg, context)
+
+
+# -- caches -----------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, s_max: int, dtype) -> KVCache:
+    kv, hd = cfg.n_kv, cfg.resolved_head_dim
+    return KVCache(k=jnp.zeros((batch, s_max, kv, hd), dtype),
+                   v=jnp.zeros((batch, s_max, kv, hd), dtype))
+
+
+def init_ring_cache(cfg, batch: int, dtype) -> RingCache:
+    kv, hd, w = cfg.n_kv, cfg.resolved_head_dim, cfg.window
+    return RingCache(k=jnp.zeros((batch, w, kv, hd), dtype),
+                     v=jnp.zeros((batch, w, kv, hd), dtype),
+                     pos=jnp.full((batch, w), -1, jnp.int32))
+
+
+def prefill_into_kv(cache: KVCache, k, v) -> KVCache:
+    s = k.shape[1]
+    return KVCache(k=jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, 1),
+                   v=jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, 1))
+
+
+def prefill_into_ring(cache: RingCache, k, v, length: int) -> RingCache:
+    """Store the last ``window`` entries of a prefilled sequence, placed at
+    their ring slots (slot = pos % window) so decode writes continue cleanly."""
+    w = cache.k.shape[1]
+    s = k.shape[1]
+    take = min(w, s)
+    pos = jnp.arange(s - take, s)                      # absolute positions
+    slots = pos % w
+    k_tail = k[:, s - take:]
+    v_tail = v[:, s - take:]
+    new_k = cache.k.at[:, slots].set(k_tail)
+    new_v = cache.v.at[:, slots].set(v_tail)
+    new_pos = cache.pos.at[:, slots].set(pos[None, :])
+    return RingCache(k=new_k, v=new_v, pos=new_pos)
+
+
+def decode_self_attention(p, cfg, x, cache, pos, *, kind: str):
+    """Single-token decode: x (B, 1, D); returns (out, new_cache)."""
+    q = _project_q(p, cfg, x)               # (B, 1, H, hd)
+    k_new, v_new = _project_kv(p, cfg, x)   # (B, 1, KV, hd)
+    if cfg.rope_theta:
+        pvec = jnp.asarray(pos)[None]
+        q = rope(q, pvec, cfg.rope_theta)
+        k_new = rope(k_new, pvec, cfg.rope_theta)
+
+    from ..kernels import ops
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+    if kind == "l":
+        w = cache.k.shape[1]
+        slot = pos % w
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, 1)
+        pos_buf = jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, jnp.full((cache.pos.shape[0], 1), pos, jnp.int32), slot, 1)
+        valid = (pos_buf >= 0) & (pos_buf >= pos - w + 1)   # (B, W)
+        out = ops.decode_attention(q, k, v, valid_mask=valid)
+        new_cache = RingCache(k=k, v=v, pos=pos_buf)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, pos, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, pos, 1)
+        valid = (jnp.arange(k.shape[1]) <= pos)[None, :]    # (1, S_max)
+        valid = jnp.broadcast_to(valid, (k.shape[0], k.shape[1]))
+        out = ops.decode_attention(q, k, v, valid_mask=valid)
+        new_cache = KVCache(k=k, v=v)
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"], new_cache
+
+
+def decode_cross_attention(p, cfg, x, context_cache):
+    q = _project_q(p, cfg, x)
+    k, v = context_cache
+    from ..kernels import ops
+    valid = jnp.ones((k.shape[0], k.shape[1]), bool)
+    out = ops.decode_attention(q, k, v, valid_mask=valid)
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"]

@@ -1,0 +1,66 @@
+"""Shared model primitives: norms, RoPE, initializers, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun-ish), cast to param dtype."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm in fp32, output cast back to input dtype."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def head_rms_norm(x, scale, eps: float = 1e-6):
+    """Per-head QK-norm (Qwen3/Gemma3): normalizes the head_dim axis."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embeddings. x: (..., S, H, hd); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x32_1 * cos - x32_2 * sin,
+                           x32_2 * cos + x32_1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset=0):
+    """(s_q, s_k) boolean mask: query i attends key j iff j <= i + offset."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return kj <= qi
+
+
+def local_mask(s_q: int, s_k: int, window: int, q_offset=0):
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) & (kj > qi - window)

@@ -1,0 +1,152 @@
+"""Channel mixers: dense (optionally gated) FFN and GShard-style MoE.
+
+MoE uses grouped top-k dispatch with capacity (tokens are grouped into
+fixed-size groups aligned with the data sharding; experts shard over the
+"model" mesh axis, so the dispatch/combine einsums lower to all-to-alls).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import shardctx
+from .common import dense_init, dtype_of
+
+MOE_GROUP = 1024          # tokens per dispatch group (DESIGN §4)
+
+
+def init_ffn(key, cfg, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, f), dt),
+         "w2": dense_init(ks[1], (f, d), dt)}
+    if cfg.gated_ffn:
+        p["w3"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+FFN_CHUNK_SEQ = 8192      # chunk the token axis above this length
+FFN_CHUNK = 2048
+
+
+def _ffn_block(p, cfg, x):
+    h = x @ p["w1"]
+    if cfg.gated_ffn:
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]
+
+
+def apply_ffn(p, cfg, x):
+    """Dense FFN; long sequences run in token chunks so the (tokens, d_ff)
+    hidden never materializes (it dwarfs HBM at 32k x 49k; two matmuls
+    cannot fuse on any backend)."""
+    s = x.shape[-2]
+    if s < FFN_CHUNK_SEQ or s % FFN_CHUNK != 0:
+        return _ffn_block(p, cfg, x)
+    lead = x.shape[:-2]
+    xc = x.reshape(*lead, s // FFN_CHUNK, FFN_CHUNK, x.shape[-1])
+    xc = jnp.moveaxis(xc, -3, 0)
+
+    def body(_, xt):
+        return None, _ffn_block(p, cfg, xt)
+
+    _, yc = jax.lax.scan(body, None, xc)
+    return jnp.moveaxis(yc, 0, -3).reshape(*lead, s, x.shape[-1])
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.resolved_moe_dff, cfg.n_experts
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "wi": dense_init(ks[1], (e, d, f), dt),
+        "wo": dense_init(ks[2], (e, f, d), dt),
+    }
+    if cfg.gated_ffn:
+        p["wg"] = dense_init(ks[3], (e, d, f), dt)
+    if cfg.shared_expert:
+        p["shared"] = init_ffn(ks[4], cfg, d_ff=cfg.resolved_moe_dff)
+    return p
+
+
+def apply_moe(p, cfg, x):
+    """x: (..., S, D) -> (y, aux_loss).  Flattens tokens into groups of
+    MOE_GROUP, dispatches top-k with capacity, runs expert FFNs batched over
+    the expert axis."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    gsize = min(MOE_GROUP, t)
+    # pad to a group multiple (only hit by tiny smoke shapes)
+    pad = (-t) % gsize
+    if pad:
+        tokens = jnp.concatenate([tokens, jnp.zeros((pad, d), tokens.dtype)])
+    g = tokens.shape[0] // gsize
+    xg = tokens.reshape(g, gsize, d)
+    xg = shardctx.constrain(xg, "dp", None, None)
+
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, -(-gsize * k // e)) * cfg.capacity_factor)
+    cap = min(cap, gsize)
+
+    logits = (xg.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)           # (G,S,E)
+
+    # Switch/GShard-style load-balancing aux loss.
+    density = jnp.mean(probs, axis=1)                                  # (G,E)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32)
+    usage = jnp.mean(top1, axis=1)
+    aux = jnp.mean(jnp.sum(density * usage, axis=-1)) * (e ** 2) / e
+
+    dispatch = jnp.zeros((g, gsize, e, cap), jnp.float32)
+    combine = jnp.zeros((g, gsize, e, cap), jnp.float32)
+    used = jnp.zeros((g, e), jnp.float32)            # capacity consumed
+    masked = probs
+    gate_sum = jnp.zeros((g, gsize), jnp.float32)
+    slots = []
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)                      # (G,S)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)     # (G,S,E)
+        gate = jnp.sum(probs * onehot, axis=-1)                # (G,S)
+        pos = (jnp.cumsum(onehot, axis=1) - onehot
+               + used[:, None, :])                             # (G,S,E)
+        keep = (pos < cap).astype(jnp.float32) * onehot
+        pos_tok = jnp.sum(pos * onehot, axis=-1)               # (G,S)
+        cap_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), cap,
+                                dtype=jnp.float32)             # (G,S,C)
+        d_k = keep[..., None] * cap_oh[:, :, None, :]          # (G,S,E,C)
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate[:, :, None, None]
+        gate_sum = gate_sum + gate * jnp.sum(keep, axis=-1)
+        used = used + jnp.sum(keep, axis=1)
+        masked = masked * (1.0 - onehot)
+        slots.append(None)
+    # renormalize combine weights over the selected experts
+    combine = combine / jnp.maximum(gate_sum[:, :, None, None], 1e-9)
+
+    cdt = dtype_of(cfg.compute_dtype)
+    g_ax = shardctx.moe_group_axis()   # "dp", or None under expert_shard_dff
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(cdt), xg)   # (E,G,C,D)
+    xe = shardctx.constrain(xe, "ep", g_ax, None, None)           # EP (x DP)
+    h = jnp.einsum("egcd,edf->egcf", xe, p["wi"])
+    if "wg" in p:
+        h = jax.nn.silu(h) * jnp.einsum("egcd,edf->egcf", xe, p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("egcf,efd->egcd", h, p["wo"])                 # (E,G,C,D)
+    ye = shardctx.constrain(ye, "ep", g_ax, None, None)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(cdt), ye)
+
+    if "shared" in p:
+        y = y + apply_ffn(p["shared"], cfg, xg)
+
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:t]
+    return y.reshape(orig_shape), aux

@@ -1,0 +1,97 @@
+"""Griffin recurrent block: temporal conv + RG-LRU (arXiv:2402.19427).
+
+Block:  x -> { gelu(W_gate x) } * RGLRU(conv1d(W_x x)) -> W_out
+RG-LRU: r_t = sigmoid(W_r u_t); i_t = sigmoid(W_i u_t)
+        log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The linear recurrence runs as an associative scan (rglru_scan kernel);
+decode keeps (conv_state, h) -- constant memory in sequence length.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .common import dense_init, dtype_of
+
+_C = 8.0
+
+
+class RglruCache(NamedTuple):
+    conv: jax.Array   # (B, conv_width-1, R)
+    h: jax.Array      # (B, R) fp32 recurrent state
+
+
+def init_rglru(key, cfg):
+    d, r = cfg.d_model, cfg.resolved_rnn_width
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, r), dt),
+        "w_gate": dense_init(ks[1], (d, r), dt),
+        "conv": dense_init(ks[2], (cfg.conv_width, r), dt, scale=0.5),
+        "w_r": dense_init(ks[3], (r, r), dt),
+        "w_i": dense_init(ks[4], (r, r), dt),
+        "lam": jnp.full((r,), 0.65, jnp.float32),   # a ~ 0.9..0.99 range
+        "w_out": dense_init(ks[5], (r, d), dt),
+    }
+
+
+def _conv_full(params, u):
+    w = params["conv"].astype(jnp.float32)
+    k = w.shape[0]
+    u32 = u.astype(jnp.float32)
+    pad = jnp.pad(u32, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u32.shape[1]] * w[i] for i in range(k))
+    return out.astype(u.dtype)
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid((u @ params["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    drive = scale * i * u.astype(jnp.float32)
+    return a, drive
+
+
+def apply_rglru(params, cfg, x, want_cache: bool = False):
+    """Full-sequence Griffin recurrent mixer. x: (B,S,D) -> (B,S,D)."""
+    u_pre = x @ params["w_x"]
+    u = _conv_full(params, u_pre)
+    a, drive = _gates(params, u)
+    h = ops.rglru_scan(drive, a)
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32))
+    y = (gate * h.astype(jnp.float32)).astype(x.dtype)
+    out = y @ params["w_out"]
+    if not want_cache:
+        return out
+    k, s = cfg.conv_width, x.shape[1]
+    conv_tail = u_pre[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+        u_pre, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    return out, RglruCache(conv=conv_tail,
+                           h=h[:, -1].astype(jnp.float32))
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> RglruCache:
+    r = cfg.resolved_rnn_width
+    return RglruCache(conv=jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+                      h=jnp.zeros((batch, r), jnp.float32))
+
+
+def apply_rglru_decode(params, cfg, x, cache: RglruCache):
+    """Single-token step. x: (B,1,D)."""
+    u_pre = (x[:, 0] @ params["w_x"])
+    hist = jnp.concatenate([cache.conv, u_pre[:, None, :]], axis=1)
+    w = params["conv"].astype(jnp.float32)
+    u = jnp.einsum("bkr,kr->br", hist.astype(jnp.float32), w).astype(x.dtype)
+    a, drive = _gates(params, u)
+    h = a * cache.h + drive
+    gate = jax.nn.gelu((x[:, 0] @ params["w_gate"]).astype(jnp.float32))
+    y = (gate * h).astype(x.dtype) @ params["w_out"]
+    return y[:, None, :], RglruCache(conv=hist[:, 1:], h=h)

@@ -1,0 +1,135 @@
+"""Mamba2 SSD block (arXiv:2405.21060), TPU-adapted.
+
+The block: in_proj -> [z | x | B | C | dt]; short depthwise conv over
+[x|B|C]; SSD scan (chunked dual form -- the Pallas kernel's domain); gated
+RMSNorm by z; out_proj.  Decode keeps (conv_state, ssd_state) caches --
+constant memory in sequence length, which is why mamba2 runs the
+``long_500k`` cell (DESIGN §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..kernels.ref import ssd_step_ref
+from .common import dense_init, dtype_of, rms_norm
+
+
+class SsmCache(NamedTuple):
+    conv: jax.Array    # (B, conv_width-1, conv_channels)
+    state: jax.Array   # (B, H, N, P) fp32 SSD state
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_headdim
+    h = d_in // p
+    n = cfg.ssm_state
+    g = 1                      # single B/C group
+    conv_ch = d_in + 2 * g * n
+    return d_in, p, h, n, g, conv_ch
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    d_in, p, h, n, g, conv_ch = _dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * g * n + h   # z, x, B, C, dt
+    params = {
+        "norm": jnp.zeros((d,), dt),
+        "in_proj": dense_init(ks[0], (d, proj_out), dt),
+        "conv": dense_init(ks[1], (cfg.conv_width, conv_ch), dt, scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.zeros((d_in,), dt),
+        "out_proj": dense_init(ks[2], (d_in, d), dt),
+    }
+    return params
+
+
+def _split_proj(cfg, proj):
+    d_in, p, h, n, g, _ = _dims(cfg)
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _split_xbc(cfg, xbc):
+    d_in, p, h, n, g, _ = _dims(cfg)
+    x, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    return x, b, c
+
+
+def _conv_full(params, xbc):
+    """Causal depthwise conv over the sequence axis. xbc: (B,S,C)."""
+    w = params["conv"].astype(jnp.float32)         # (K, C)
+    k = w.shape[0]
+    x32 = xbc.astype(jnp.float32)
+    pad = jnp.pad(x32, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x32.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def apply_ssm(params, cfg, x, want_cache: bool = False):
+    """Full-sequence SSD block. x: (B,S,D) -> (B,S,D) [, SsmCache]."""
+    d_in, p, h, n, g, _ = _dims(cfg)
+    normed = rms_norm(x, params["norm"])
+    proj = normed @ params["in_proj"]
+    z, xbc_pre, dt_raw = _split_proj(cfg, proj)
+    xbc = _conv_full(params, xbc_pre)
+    xs, b, c = _split_xbc(cfg, xbc)
+    bsz, s = x.shape[0], x.shape[1]
+    xh = xs.reshape(bsz, s, h, p)
+    bh = b.reshape(bsz, s, g, n)
+    ch = c.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    y, final_state = ops.ssd_scan(xh, dt, params["a_log"], bh, ch,
+                                  params["d_skip"], chunk=min(cfg.ssm_chunk, s))
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"])
+    out = y @ params["out_proj"]
+    if not want_cache:
+        return out
+    k = cfg.conv_width
+    conv_tail = xbc_pre[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+        xbc_pre, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    return out, SsmCache(conv=conv_tail, state=final_state)
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SsmCache:
+    d_in, p, h, n, g, conv_ch = _dims(cfg)
+    return SsmCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, h, n, p), jnp.float32))
+
+
+def apply_ssm_decode(params, cfg, x, cache: SsmCache):
+    """Single-token step. x: (B,1,D) -> (y (B,1,D), new cache)."""
+    d_in, p, h, n, g, conv_ch = _dims(cfg)
+    bsz = x.shape[0]
+    normed = rms_norm(x[:, 0], params["norm"])
+    proj = normed @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    # rolling conv state
+    hist = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w)
+    xbc_t = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = hist[:, 1:]
+    xs, b, c = _split_xbc(cfg, xbc_t)
+    xh = xs.reshape(bsz, h, p)
+    bh = b.reshape(bsz, g, n)
+    ch = c.reshape(bsz, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    y, new_state = ssd_step_ref(cache.state, xh, dt, params["a_log"], bh, ch,
+                                params["d_skip"])
+    y = y.reshape(bsz, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"])
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, SsmCache(conv=new_conv, state=new_state)

@@ -1,0 +1,107 @@
+"""Train / serve step factories over the unified transformer core.
+
+``make_train_step(cfg)`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with CE loss over (optionally vocab-sharded) fp32 logits, MoE load-balance
+aux loss, and hand-rolled AdamW (moment dtype per cfg.opt_state_dtype).
+
+``make_prefill`` / ``make_decode_step`` wrap the serving paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adam import adam
+from .common import dtype_of
+from . import transformer
+
+MOE_AUX_COEF = 0.01
+
+
+def cross_entropy(logits, targets, mask=None):
+    """Mean token CE.  logits fp32 (B,S,V); targets (B,S) int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, cfg, batch):
+    logits, aux = transformer.forward_train(params, cfg, batch)
+    ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+    return ce + MOE_AUX_COEF * aux, (ce, aux)
+
+
+def default_microbatches(cfg, global_batch: int) -> int:
+    """Split the per-step batch so remat activation stacks fit HBM.
+    The >=90B configs need deep splits on a single 256-chip pod."""
+    if not cfg.fsdp:
+        return 1
+    target = {True: 16}.get(cfg.n_experts > 0, 8)
+    return min(target, global_batch)
+
+
+def make_train_step(cfg, lr: float = 3e-4, weight_decay: float = 0.1,
+                    grad_clip: float = 1.0, microbatches: int = 1):
+    """Returns (opt_init, train_step) with gradient accumulation.
+
+    ``microbatches > 1`` scans over batch shards, accumulating grads
+    (fp32 for <90B models, bf16 for the FSDP giants where the accumulator
+    itself is HBM-significant) before a single optimizer update.
+    """
+    opt_init, opt_update = adam(lr, weight_decay=weight_decay,
+                                grad_clip=grad_clip,
+                                state_dtype=dtype_of(cfg.opt_state_dtype))
+    acc_dtype = jnp.bfloat16 if cfg.fsdp else jnp.float32
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, (ce, aux)), grads = grads_of(params, batch)
+        else:
+            def shard(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(shard, batch)
+
+            def body(acc, micro):
+                g_acc, loss_a, ce_a, aux_a = acc
+                (l, (c, a)), g = grads_of(params, micro)
+                g_acc = jax.tree.map(
+                    lambda t, u: t + (u / microbatches).astype(acc_dtype),
+                    g_acc, g)
+                return (g_acc, loss_a + l / microbatches,
+                        ce_a + c / microbatches, aux_a + a / microbatches), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0, 0.0), mb)
+        params, opt_state = opt_update(grads, opt_state, params)
+        metrics = {"loss": loss, "ce": ce, "aux": aux}
+        return params, opt_state, metrics
+
+    return opt_init, train_step
+
+
+def make_prefill(cfg, s_max: int):
+    return functools.partial(transformer.prefill, cfg=cfg, s_max=s_max)
+
+
+def make_decode_step(cfg):
+    return functools.partial(transformer.decode_step, cfg=cfg)
+
+
+def make_serve_step(cfg):
+    """The decode-shape dry-run target: one new token against a full cache."""
+    def serve_step(params, caches, tokens):
+        return transformer.decode_step(params, cfg, caches, tokens)
+    return serve_step

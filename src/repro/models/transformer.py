@@ -1,0 +1,366 @@
+"""Unified model core for all 10 assigned architectures.
+
+The layer stack is organized as ``n_units`` repetitions of
+``cfg.block_pattern`` (+ an explicit ``tail_pattern``), scanned with
+``lax.scan`` over stacked unit parameters — heterogeneous stacks (5:1
+local:global, dense/MoE alternation, Griffin 1:2, interleaved cross-attn)
+stay exact while the HLO stays one-unit-sized (DESIGN §4).
+
+Three entry points:
+  * ``forward_train``: teacher-forced logits (+ MoE aux loss)
+  * ``prefill``:       builds the serving cache, returns last-token logits
+  * ``decode_step``:   one token against the cache
+
+Caches are pytrees mirroring the unit structure; "l" layers hold ring
+buffers (window slots), "r"/"s" layers hold recurrent state — constant
+memory in context length (why hybrid/ssm archs run long_500k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import shardctx
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import dense_init, dtype_of, embed_init, rms_norm
+
+Params = Any
+Cache = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg, kind: str) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    norm = lambda: jnp.zeros((d,), dt)
+    if kind == "s":
+        return {"ssm": ssm_mod.init_ssm(ks[0], cfg)}
+    if kind == "r":
+        return {"norm1": norm(), "rglru": rglru_mod.init_rglru(ks[0], cfg),
+                "norm2": norm(), "ffn": ffn_mod.init_ffn(ks[1], cfg)}
+    if kind == "m":
+        return {"norm1": norm(), "attn": attn.init_attention(ks[0], cfg),
+                "norm2": norm(), "moe": ffn_mod.init_moe(ks[1], cfg)}
+    if kind == "x":
+        return {"norm1": norm(),
+                "xattn": attn.init_attention(ks[0], cfg, cross=True),
+                "norm2": norm(), "ffn": ffn_mod.init_ffn(ks[1], cfg)}
+    if kind == "d":
+        return {"norm1": norm(), "attn": attn.init_attention(ks[0], cfg),
+                "norm_x": norm(),
+                "xattn": attn.init_attention(ks[1], cfg, cross=True),
+                "norm2": norm(), "ffn": ffn_mod.init_ffn(ks[2], cfg)}
+    # "g" | "l" | "e"
+    return {"norm1": norm(), "attn": attn.init_attention(ks[0], cfg),
+            "norm2": norm(), "ffn": ffn_mod.init_ffn(ks[1], cfg)}
+
+
+def _init_stack(key, cfg, pattern, n: int) -> Params:
+    """Stacked params: {"slot{i}": vmapped init over n copies}."""
+    out = {}
+    for i, kind in enumerate(pattern):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
+        out[f"slot{i}"] = jax.vmap(
+            functools.partial(_init_layer, cfg=cfg, kind=kind))(keys)
+    return out
+
+
+def init_params(key, cfg) -> Params:
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": embed_init(ks[0], (cfg.vocab, cfg.d_model),
+                            dtype_of(cfg.param_dtype)),
+        "units": _init_stack(ks[1], cfg, cfg.block_pattern, cfg.n_units),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype_of(cfg.param_dtype)),
+    }
+    if cfg.tail_pattern:
+        params["tail"] = [
+            _init_layer(k, cfg, kind) for k, kind in
+            zip(jax.random.split(ks[2], len(cfg.tail_pattern)),
+                cfg.tail_pattern)]
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab),
+                                    dtype_of(cfg.param_dtype))
+    if cfg.enc_layers:
+        params["encoder"] = {
+            "units": _init_stack(ks[4], cfg, ("e",), cfg.enc_layers),
+            "final_norm": jnp.zeros((cfg.d_model,),
+                                    dtype_of(cfg.param_dtype)),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence layer application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_full(p, cfg, kind, x, positions, ctx, want_cache: bool,
+                s_max: int = 0):
+    """Apply one layer to a full sequence.  Returns (x, aux, cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = ()
+    cdt = dtype_of(cfg.compute_dtype)
+    if kind == "s":
+        if want_cache:
+            y, cache = ssm_mod.apply_ssm(p["ssm"], cfg, x, want_cache=True)
+        else:
+            y = ssm_mod.apply_ssm(p["ssm"], cfg, x)
+        return x + y, aux, cache
+    if kind == "r":
+        normed = rms_norm(x, p["norm1"])
+        if want_cache:
+            h, cache = rglru_mod.apply_rglru(p["rglru"], cfg, normed,
+                                             want_cache=True)
+        else:
+            h = rglru_mod.apply_rglru(p["rglru"], cfg, normed)
+        x = x + h
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        return x, aux, cache
+    if kind == "x":
+        normed = rms_norm(x, p["norm1"])
+        kv = attn.context_kv(p["xattn"], cfg, ctx)
+        x = x + attn.cross_attention(p["xattn"], cfg, normed, kv)
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        if want_cache:
+            cache = {"ctx_kv": kv}
+        return x, aux, cache
+    if kind == "d":
+        normed = rms_norm(x, p["norm1"])
+        out, (k, v) = attn.self_attention(p["attn"], cfg, normed,
+                                          positions, kind="g")
+        x = x + out
+        kv = attn.context_kv(p["xattn"], cfg, ctx)
+        x = x + attn.cross_attention(p["xattn"], cfg,
+                                     rms_norm(x, p["norm_x"]), kv)
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        if want_cache:
+            cache = {"self": _fill_kv(cfg, k, v, s_max, cdt), "ctx_kv": kv}
+        return x, aux, cache
+
+    # attention layers: g / l / e / m
+    akind = "l" if kind == "l" else ("e" if kind == "e" else "g")
+    normed = rms_norm(x, p["norm1"])
+    out, (k, v) = attn.self_attention(p["attn"], cfg, normed, positions,
+                                      kind=akind)
+    x = x + out
+    if kind == "m":
+        y, aux = ffn_mod.apply_moe(p["moe"], cfg, rms_norm(x, p["norm2"]))
+        x = x + y
+    else:
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+    if want_cache:
+        if kind == "l":
+            ring = attn.init_ring_cache(cfg, x.shape[0], cdt)
+            cache = attn.prefill_into_ring(ring, k.astype(cdt),
+                                           v.astype(cdt), k.shape[1])
+        elif kind != "e":
+            cache = _fill_kv(cfg, k, v, s_max, cdt)
+    return x, aux, cache
+
+
+def _fill_kv(cfg, k, v, s_max, dtype):
+    full = attn.init_kv_cache(cfg, k.shape[0], s_max, dtype)
+    return attn.prefill_into_kv(full, k.astype(dtype), v.astype(dtype))
+
+
+def _run_stack(params, cfg, pattern, x, positions, ctx, want_cache,
+               s_max=0, remat=False):
+    """Scan over stacked units, then apply tail layers.  Returns
+    (x, aux_sum, caches) with caches = {"units": ..., "tail": [...]}.
+    """
+
+    def unit_fn(x, unit_p):
+        aux = jnp.zeros((), jnp.float32)
+        caches = {}
+        x = shardctx.constrain(x, "dp", "sp", None)
+        for i, kind in enumerate(pattern):
+            x, a, c = _layer_full(unit_p[f"slot{i}"], cfg, kind, x,
+                                  positions, ctx, want_cache, s_max)
+            x = shardctx.constrain(x, "dp", "sp", None)
+            aux = aux + a
+            caches[f"slot{i}"] = c
+        return x, (aux, caches)
+
+    if remat:
+        if shardctx.remat_offload_active():
+            # host-offloaded carry stacks: HBM holds one unit's activations,
+            # the saved per-unit inputs stream to host DRAM (§Perf cell B).
+            policy = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["unit_carry"],
+                offload_src="device", offload_dst="pinned_host")
+            inner = unit_fn
+
+            def named_unit(x, unit_p):
+                from jax.ad_checkpoint import checkpoint_name
+                return inner(checkpoint_name(x, "unit_carry"), unit_p)
+
+            unit_fn = jax.checkpoint(named_unit, policy=policy)
+        else:
+            unit_fn = jax.checkpoint(unit_fn)
+
+    def scan_body(carry, unit_p):
+        x, aux = carry
+        x, (a, caches) = unit_fn(x, unit_p)
+        return (x, aux + a), caches
+
+    (x, aux), unit_caches = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), params["units"])
+
+    tail_caches = []
+    for tp, kind in zip(params.get("tail", []), cfg.tail_pattern):
+        x, a, c = _layer_full(tp, cfg, kind, x, positions, ctx,
+                              want_cache, s_max)
+        aux = aux + a
+        tail_caches.append(c)
+    return x, aux, {"units": unit_caches, "tail": tail_caches}
+
+
+def _encode(params, cfg, src_embeds):
+    """Run the (bidirectional) encoder stack on frame embeddings."""
+    enc = params["encoder"]
+    pos = jnp.arange(src_embeds.shape[1])
+    x = src_embeds.astype(dtype_of(cfg.compute_dtype))
+
+    def unit_fn(x, unit_p):
+        x, _, _ = _layer_full(unit_p["slot0"], cfg, "e", x, pos, None, False)
+        return x, None
+
+    x, _ = jax.lax.scan(lambda c, p: unit_fn(c, p), x, enc["units"])
+    return rms_norm(x, enc["final_norm"])
+
+
+def _context(params, cfg, batch):
+    """Cross-attention context: image embeds (vlm) or encoder output (audio)."""
+    if cfg.frontend == "vision":
+        return batch["image_embeds"].astype(dtype_of(cfg.compute_dtype))
+    if cfg.enc_layers:
+        return _encode(params, cfg, batch["src_embeds"])
+    return None
+
+
+def _logits(params, cfg, x):
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head).astype(jnp.float32)
+    return shardctx.constrain(logits, "dp", None, "tp")
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg, batch):
+    """Teacher-forced logits.  batch: tokens (B,S) [+ image_embeds /
+    src_embeds].  Returns (logits (B,S,V) fp32, aux)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    x = shardctx.constrain(x, "dp", "sp", None)
+    ctx = _context(params, cfg, batch)
+    positions = jnp.arange(tokens.shape[1])
+    x, aux, _ = _run_stack(params, cfg, cfg.block_pattern, x, positions, ctx,
+                           want_cache=False, remat=cfg.remat)
+    return _logits(params, cfg, x), aux
+
+
+def prefill(params, cfg, batch, s_max: int):
+    """Build the serving cache from a prompt.  Returns (last-token logits
+    (B,V), cache).  ``s_max`` sizes the KV buffers (prompt + decode budget).
+    """
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    ctx = _context(params, cfg, batch)
+    positions = jnp.arange(tokens.shape[1])
+    x, _, caches = _run_stack(params, cfg, cfg.block_pattern, x, positions,
+                              ctx, want_cache=True, s_max=s_max, remat=False)
+    caches["pos"] = jnp.int32(tokens.shape[1])
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, caches
+
+
+# -- decode -------------------------------------------------------------------
+
+def _layer_decode(p, cfg, kind, x, cache, pos):
+    """Single-token layer step.  Returns (x, new_cache)."""
+    if kind == "s":
+        y, cache = ssm_mod.apply_ssm_decode(p["ssm"], cfg, x, cache)
+        return x + y, cache
+    if kind == "r":
+        h, cache = rglru_mod.apply_rglru_decode(
+            p["rglru"], cfg, rms_norm(x, p["norm1"]), cache)
+        x = x + h
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        return x, cache
+    if kind == "x":
+        normed = rms_norm(x, p["norm1"])
+        x = x + attn.decode_cross_attention(p["xattn"], cfg, normed,
+                                            cache["ctx_kv"])
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        return x, cache
+    if kind == "d":
+        normed = rms_norm(x, p["norm1"])
+        out, new_self = attn.decode_self_attention(p["attn"], cfg, normed,
+                                                   cache["self"], pos, kind="g")
+        x = x + out
+        x = x + attn.decode_cross_attention(p["xattn"], cfg,
+                                            rms_norm(x, p["norm_x"]),
+                                            cache["ctx_kv"])
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        return x, {"self": new_self, "ctx_kv": cache["ctx_kv"]}
+
+    akind = "l" if kind == "l" else "g"
+    normed = rms_norm(x, p["norm1"])
+    out, cache = attn.decode_self_attention(p["attn"], cfg, normed, cache,
+                                            pos, kind=akind)
+    x = x + out
+    if kind == "m":
+        y, _ = ffn_mod.apply_moe(p["moe"], cfg, rms_norm(x, p["norm2"]))
+        x = x + y
+    else:
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+    return x, cache
+
+
+def decode_step(params, cfg, caches, tokens):
+    """One decode step.  tokens: (B,) int32.  Returns (logits (B,V), caches).
+    The write position comes from ``caches["pos"]`` (synchronized batch)."""
+    pos = caches["pos"]
+    x = params["embed"][tokens][:, None, :].astype(dtype_of(cfg.compute_dtype))
+
+    def scan_body(x, inp):
+        unit_p, unit_c = inp
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c = _layer_decode(unit_p[f"slot{i}"], cfg, kind, x,
+                                 unit_c[f"slot{i}"], pos)
+            new_c[f"slot{i}"] = c
+        return x, new_c
+
+    x, new_unit_caches = jax.lax.scan(
+        scan_body, x, (params["units"], caches["units"]))
+
+    new_tail = []
+    for tp, kind, tc in zip(params.get("tail", []), cfg.tail_pattern,
+                            caches["tail"]):
+        x, c = _layer_decode(tp, cfg, kind, x, tc, pos)
+        new_tail.append(c)
+
+    logits = _logits(params, cfg, x)[:, 0]
+    new_caches = {"units": new_unit_caches, "tail": new_tail,
+                  "pos": pos + 1}
+    return logits, new_caches

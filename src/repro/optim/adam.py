@@ -1,0 +1,74 @@
+"""Hand-rolled Adam/AdamW on pytrees (no optax in this container).
+
+Used by both the DRL control plane (PPO actor/critic) and the LM data plane
+(train_step).  Optimizer-state dtype is configurable: fp32 for <10B models,
+bf16 moments for the 90B-400B configs so the dry-run memory analysis fits
+(see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any       # first moment, pytree like params
+    nu: Any       # second moment, pytree like params
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, grad_clip: float | None = None,
+         state_dtype: jnp.dtype | None = None):
+    """Returns (init_fn, update_fn).
+
+    ``update_fn(grads, state, params) -> (new_params, new_state)``.
+    ``weight_decay`` applies decoupled (AdamW) decay; ``grad_clip`` is a
+    global-norm clip applied before the moment updates.
+    """
+
+    def _cast(x):
+        return x.astype(state_dtype) if state_dtype is not None else x
+
+    def init_fn(params) -> AdamState:
+        zeros = lambda p: _cast(jnp.zeros_like(p))
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update_fn(grads, state: AdamState, params):
+        if grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1.0 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1.0 - b2) * jnp.square(g32)
+            update = (m32 / b1t) / (jnp.sqrt(v32 / b2t) + eps)
+            if weight_decay:
+                update = update + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * update
+            return new_p.astype(p.dtype), _cast(m32), _cast(v32)
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamState(step=step, mu=new_mu, nu=new_nu)
+
+    return init_fn, update_fn
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

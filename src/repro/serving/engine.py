@@ -1,0 +1,105 @@
+"""Batched serving engine for the edge tier: continuous batching over fixed
+decode slots, KV-cache managed through the transformer cache pytree.
+
+The ES side of the paper's system: requests (prompts) arrive continuously;
+the engine prefills them into free slots and steps all active slots together
+(synchronized decode).  Finished sequences free their slot for the next
+queued request.  Works on any decoder-only arch config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 128):
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.s_max = s_max
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.remaining = np.zeros(slots, np.int32)
+        self.cache = None
+        self._decode = jax.jit(
+            lambda cache, toks: transformer.decode_step(params, cfg, cache, toks))
+        self._prefill = jax.jit(
+            lambda batch: transformer.prefill(params, cfg, batch, s_max=s_max))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        """Fill free slots with queued requests (batch prefill).
+
+        Synchronized-batch simplification: admission happens when ALL slots
+        are free (prompts share one prefill); a production engine would use
+        per-slot position tracking -- noted in DESIGN.md.
+        """
+        if any(r is not None for r in self.active) or not self.queue:
+            return
+        batch = []
+        while self.queue and len(batch) < self.slots:
+            batch.append(self.queue.popleft())
+        while len(batch) < self.slots:       # pad with a copy (masked out)
+            batch.append(Request(rid=-1, prompt=batch[0].prompt, max_new=0))
+        width = max(len(r.prompt) for r in batch)
+        toks = np.stack([np.pad(r.prompt, (width - len(r.prompt), 0))
+                         for r in batch])    # left-pad to common width
+        logits, cache = self._prefill({"tokens": jnp.asarray(toks, jnp.int32)})
+        self.cache = cache
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i, r in enumerate(batch):
+            self.active[i] = r if r.rid >= 0 else None
+            self.remaining[i] = r.max_new
+            if r.rid >= 0 and r.max_new > 0:
+                r.out.append(int(nxt[i]))
+                self.remaining[i] -= 1
+        self._last = nxt
+
+    def step(self) -> bool:
+        """One engine iteration.  Returns False when idle."""
+        self._admit()
+        if self.cache is None or all(r is None for r in self.active):
+            return False
+        logits, self.cache = self._decode(self.cache,
+                                          jnp.asarray(self._last, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        self._last = nxt
+        alive = False
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            if self.remaining[i] > 0:
+                r.out.append(int(nxt[i]))
+                self.remaining[i] -= 1
+            if self.remaining[i] <= 0:
+                r.done = True
+                self.active[i] = None
+            else:
+                alive = True
+        if not alive and not self.queue:
+            self.cache = None
+        return True
+
+    def run_until_idle(self, max_steps: int = 10_000):
+        finished = []
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return finished

@@ -1,0 +1,105 @@
+"""Partitioned-model execution: the paper's Fig. 1 on the LM stack.
+
+A ``PartitionedLM`` splits a decoder-only arch at a *unit* boundary: units
+``0..cut_unit-1`` run on the device tier ("UE"), the rest on the edge tier
+("ES"), with the boundary hidden state (psi in the paper) crossing between.
+The two halves are independent jitted programs, so on real hardware they
+land on different meshes/hosts; the LyMDO controller picks ``cut_unit`` per
+slot from the arch's layer profile (profiling/lmprofiles.py).
+
+Cuts are restricted to unit boundaries (the block-scan granularity);
+``layer_cut_to_unit`` maps a profile-layer cut onto the nearest unit cut.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import transformer
+from ..models.common import dtype_of, rms_norm
+
+
+def split_params(params, cut_unit: int):
+    """Slice the stacked unit params into (ue_half, es_half)."""
+    ue_units = jax.tree.map(lambda a: a[:cut_unit], params["units"])
+    es_units = jax.tree.map(lambda a: a[cut_unit:], params["units"])
+    ue = {"embed": params["embed"], "units": ue_units}
+    es = {k: v for k, v in params.items() if k != "units"}
+    es["units"] = es_units
+    return ue, es
+
+
+def layer_cut_to_unit(cfg: ArchConfig, layer_cut: int) -> int:
+    """Map a profile-layer cut (0..L) to a unit boundary (0..n_units).
+
+    Profile layers: [input, embed, stack..., head]; stack layer i sits in
+    unit i // len(pattern)."""
+    stack_cut = max(0, layer_cut - 2 + 1)    # layers executed locally
+    unit = min(stack_cut // len(cfg.block_pattern), cfg.n_units)
+    return unit
+
+
+class PartitionedLM:
+    """Two-tier forward pass for decoder-only archs (no tail/enc support --
+    the controller keeps those archs at unit-boundary cuts of the main
+    stack; DESIGN §4)."""
+
+    def __init__(self, cfg: ArchConfig, params, cut_unit: int):
+        assert not cfg.enc_layers and not cfg.tail_pattern, \
+            "partitioned demo supports plain-stack archs"
+        self.cfg = cfg
+        self.cut_unit = int(cut_unit)
+        self.ue_params, self.es_params = split_params(params, self.cut_unit)
+        self._ue = jax.jit(functools.partial(self._ue_half, cfg=cfg))
+        self._es = jax.jit(functools.partial(self._es_half, cfg=cfg))
+
+    @staticmethod
+    def _run_units(units, cfg, x, positions):
+        def body(carry, unit_p):
+            x = carry
+            for i, kind in enumerate(cfg.block_pattern):
+                x, _, _ = transformer._layer_full(
+                    unit_p[f"slot{i}"], cfg, kind, x, positions, None, False)
+            return x, None
+        x, _ = jax.lax.scan(body, x, units)
+        return x
+
+    @staticmethod
+    def _ue_half(params, tokens, *, cfg):
+        x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+        positions = jnp.arange(tokens.shape[1])
+        return PartitionedLM._run_units(params["units"], cfg, x, positions)
+
+    @staticmethod
+    def _es_half(params, hidden, *, cfg):
+        positions = jnp.arange(hidden.shape[1])
+        x = PartitionedLM._run_units(params["units"], cfg, hidden, positions)
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return (x @ head).astype(jnp.float32)
+
+    def boundary_bytes(self, batch: int, seq: int) -> int:
+        """psi: what crosses the uplink (eq. 3's payload)."""
+        if self.cut_unit == 0:
+            return batch * seq * 4                      # raw tokens
+        return batch * seq * self.cfg.d_model * 2        # bf16 hidden
+
+    def infer(self, tokens):
+        """Returns (logits, boundary_activation) -- the latter is what the
+        transmission model charges for."""
+        if self.cut_unit == 0:
+            # full offload: raw tokens cross the uplink, ES does everything
+            x = self.es_params["embed"][tokens].astype(
+                dtype_of(self.cfg.compute_dtype))
+            positions = jnp.arange(tokens.shape[1])
+            x = self._run_units(self.es_params["units"], self.cfg, x, positions)
+            x = rms_norm(x, self.es_params["final_norm"])
+            head = (self.es_params["embed"].T if self.cfg.tie_embeddings
+                    else self.es_params["head"])
+            return (x @ head).astype(jnp.float32), tokens
+        hidden = self._ue(self.ue_params, tokens)
+        logits = self._es(self.es_params, hidden)
+        return logits, hidden

@@ -1,0 +1,84 @@
+"""Activation-sharding context: logical constraints the model code can emit
+without knowing the mesh.
+
+The launcher (dryrun/train/serve) activates the context under ``with mesh:``;
+model code calls ``constrain(x, "dp", None, "tp")`` at key activation
+boundaries (embedding output, scan-body entry, MoE dispatch, logits).  When
+inactive (CPU smoke tests) it is a no-op.  Constraints are skipped for any
+dim not divisible by its mesh axes, keeping them exact.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: dict = {"active": False, "dp": None, "tp": None, "dp_n": 1, "tp_n": 1,
+              "sp": None, "sp_n": 1, "moe_dp": True, "remat_offload": False,
+              "ep": "model", "ep_n": 1}
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, seq_shard: bool = False,
+                        moe_dp_groups: bool = True,
+                        remat_offload: bool = False,
+                        expert_axis: str = "model"):
+    """Activate logical axes: dp = ("pod","data") portion, tp = "model".
+
+    ``seq_shard=True`` additionally maps the logical "sp" axis (the sequence
+    dim of residual activations) onto "model" -- context parallelism for
+    prefill (EXPERIMENTS §Perf cell C).
+
+    ``moe_dp_groups=False`` stops sharding MoE dispatch groups over the data
+    axis -- required when expert F-dims shard over "data"
+    (ShardingOptions.expert_shard_dff), otherwise the dispatched tokens and
+    the expert contraction fight over the same mesh axis (§Perf cell B)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = "model" if "model" in mesh.axis_names else None
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    old = dict(_CTX)
+    _CTX.update(active=True, dp=dp, tp=tp, dp_n=dp_n,
+                tp_n=mesh.shape.get("model", 1),
+                sp=tp if seq_shard else None,
+                sp_n=mesh.shape.get("model", 1),
+                moe_dp=moe_dp_groups, remat_offload=remat_offload,
+                ep=expert_axis if expert_axis in mesh.axis_names else None,
+                ep_n=mesh.shape.get(expert_axis, 1))
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def moe_group_axis() -> str | None:
+    """Logical axis for MoE dispatch-group dims ("dp" or None)."""
+    return "dp" if _CTX["moe_dp"] else None
+
+
+def remat_offload_active() -> bool:
+    """Host-offloaded remat carries (EXPERIMENTS §Perf cell B iter 3)."""
+    return bool(_CTX["remat_offload"])
+
+
+def constrain(x, *logical):
+    """logical: one of "dp", "tp", "sp", None per dim of x."""
+    if not _CTX["active"]:
+        return x
+    axes = []
+    for dim, name in zip(x.shape, logical):
+        if name == "dp" and _CTX["dp"] and dim % _CTX["dp_n"] == 0:
+            axes.append(_CTX["dp"])
+        elif name == "tp" and _CTX["tp"] and dim % _CTX["tp_n"] == 0:
+            axes.append(_CTX["tp"])
+        elif name == "sp" and _CTX["sp"] and dim % _CTX["sp_n"] == 0:
+            axes.append(_CTX["sp"])
+        elif name == "ep" and _CTX["ep"] and dim % _CTX["ep_n"] == 0:
+            axes.append(_CTX["ep"])
+        else:
+            axes.append(None)
+    if all(a is None for a in axes):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*axes))

@@ -1,0 +1,147 @@
+"""Exactness of the per-slot convex allocators (paper Sec. IV-C)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import convex
+
+
+# ---------------------------------------------------------------------------
+# P3: Fibonacci search vs dense grid
+# ---------------------------------------------------------------------------
+
+@given(q=st.floats(0.0, 500.0), d=st.floats(1e7, 4e8), lam=st.floats(0.2, 2.5))
+@settings(max_examples=40, deadline=None)
+def test_p3_beats_dense_grid(q, d, lam):
+    kappa, v, f_max = 1e-28, 10.0, 1.5e9
+    if d * lam * 1.01 >= f_max:
+        return
+    f_star = float(convex.solve_p3(jnp.float32(q), kappa, jnp.float32(d),
+                                   jnp.float32(lam), v, f_max))
+    grid = np.linspace(d * lam * 1.001 + 1.0, f_max, 20_000)
+    obj = np.array(convex.p3_objective(jnp.asarray(grid, jnp.float32), q,
+                                       kappa, d, lam, v))
+    best = grid[np.argmin(obj)]
+    j_star = float(convex.p3_objective(jnp.float32(f_star), q, kappa, d, lam, v))
+    j_grid = float(np.min(obj))
+    # Fibonacci optimum must be at least as good as a 20k-point grid (small
+    # tolerance for float32 evaluation noise).
+    assert j_star <= j_grid * (1 + 2e-3) + 1e-6, (f_star, best)
+
+
+def test_p3_zero_demand_gives_zero():
+    out = convex.solve_p3(jnp.zeros(3), 1e-28, jnp.zeros(3), jnp.ones(3), 10.0, 1.5e9)
+    assert np.all(np.array(out) == 0.0)
+
+
+def test_p3_energy_pressure_lowers_frequency():
+    d, lam = jnp.float32(2e8), jnp.float32(2.0)
+    f_low_q = float(convex.solve_p3(jnp.float32(0.0), 1e-28, d, lam, 10.0, 1.5e9))
+    f_high_q = float(convex.solve_p3(jnp.float32(1e4), 1e-28, d, lam, 10.0, 1.5e9))
+    assert f_high_q < f_low_q  # big energy queue -> throttle the CPU
+    assert f_low_q == pytest.approx(1.5e9, rel=1e-3)  # no pressure -> run flat out
+
+
+# ---------------------------------------------------------------------------
+# P4: closed form (eq. 23)
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0.0, 1e9), min_size=2, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_p4_kkt(ds):
+    d = jnp.asarray(ds, jnp.float32)
+    f_max = 15e9
+    f = np.array(convex.solve_p4(d, f_max))
+    if float(jnp.sum(d)) == 0:
+        assert np.all(f == 0)
+        return
+    assert np.sum(f) == pytest.approx(f_max, rel=1e-5)      # C3 tight
+    assert np.all(f >= 0)                                   # C5
+    # proportionality f_n ~ sqrt(d_n)  (eq. 23); mask with f32 semantics:
+    # XLA flushes sub-normal demands to zero -> zero share, correctly, so
+    # only f32-normal demands participate in the ratio check.
+    root = np.sqrt(np.maximum(np.asarray(d, np.float64), 0))
+    nz = np.asarray(d, np.float64) >= 1.2e-38
+    if nz.sum() >= 2:
+        ratios = f[nz] / root[nz]
+        assert np.allclose(ratios, ratios[0], rtol=1e-4)
+
+
+def test_p4_optimality_vs_perturbation():
+    d = jnp.asarray([1e8, 4e8, 9e8], jnp.float32)
+    f = np.array(convex.solve_p4(d, 15e9))
+    base = np.sum(np.array(d) / f)
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        eps = rng.normal(0, 0.02 * 15e9 / 3, 3)
+        eps -= eps.mean()  # stay on the simplex
+        fp = np.clip(f + eps, 1e6, None)
+        fp *= 15e9 / fp.sum()
+        assert np.sum(np.array(d) / fp) >= base * (1 - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# P5: KKT bisection vs brute force & KKT residuals
+# ---------------------------------------------------------------------------
+
+def _p5_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    gain = rng.exponential(1.0, n) * 1.58e-11
+    psi = rng.uniform(0.05e6, 1.0e6, n)
+    lam = rng.uniform(0.5, 2.5, n)
+    q = rng.uniform(0.0, 200.0, n)
+    return (jnp.asarray(q, jnp.float32), 0.1, jnp.asarray(lam, jnp.float32),
+            10.0, jnp.asarray(psi, jnp.float32), 5e6,
+            jnp.asarray(gain, jnp.float32), 10 ** (-17.4) / 1000.0)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_p5_beats_brute_force_n2(seed):
+    q, p, lam, v, psi, w, gain, n0 = _p5_inputs(2, seed)
+    alpha = np.array(convex.solve_p5(q, p, lam, v, psi, w, gain, n0))
+    assert alpha.sum() == pytest.approx(1.0, abs=1e-4)
+    best = np.inf
+    for a0 in np.linspace(1e-4, 1 - 1e-4, 4001):
+        val = float(convex.p5_objective(jnp.asarray([a0, 1 - a0], jnp.float32),
+                                        q, p, lam, v, psi, w, gain, n0))
+        best = min(best, val)
+    ours = float(convex.p5_objective(jnp.asarray(alpha, jnp.float32),
+                                     q, p, lam, v, psi, w, gain, n0))
+    assert ours <= best * (1 + 1e-3)
+
+
+@pytest.mark.parametrize("n", [3, 5, 8])
+def test_p5_kkt_residual(n):
+    """At the optimum the marginal value of bandwidth is equalized."""
+    q, p, lam, v, psi, w, gain, n0 = _p5_inputs(n, seed=n)
+    alpha = np.array(convex.solve_p5(q, p, lam, v, psi, w, gain, n0))
+    assert alpha.sum() == pytest.approx(1.0, abs=1e-4)
+    s = np.array(p * gain / (w * n0))
+    coeff = np.array((q * p * lam + v) * 8.0 * psi / w)
+    log_m = np.array(convex._log_marginal(jnp.asarray(alpha, jnp.float32),
+                                          jnp.asarray(s, jnp.float32),
+                                          jnp.log(jnp.asarray(coeff, jnp.float32))))
+    spread = log_m.max() - log_m.min()
+    assert spread < 5e-3, f"marginals not equalized: {log_m}"
+
+
+def test_p5_inactive_ues_get_zero():
+    q, p, lam, v, psi, w, gain, n0 = _p5_inputs(4, seed=7)
+    psi = psi.at[1].set(0.0).at[3].set(0.0)
+    alpha = np.array(convex.solve_p5(q, p, lam, v, psi, w, gain, n0))
+    assert alpha[1] == 0.0 and alpha[3] == 0.0
+    assert alpha.sum() == pytest.approx(1.0, abs=1e-4)
+
+
+def test_p5_single_active_ue_takes_all():
+    q, p, lam, v, psi, w, gain, n0 = _p5_inputs(3, seed=9)
+    psi = psi.at[0].set(0.0).at[2].set(0.0)
+    alpha = np.array(convex.solve_p5(q, p, lam, v, psi, w, gain, n0))
+    assert alpha == pytest.approx([0.0, 1.0, 0.0])
+
+
+def test_p5_all_idle():
+    q, p, lam, v, psi, w, gain, n0 = _p5_inputs(3, seed=11)
+    alpha = np.array(convex.solve_p5(q, p, lam, v, jnp.zeros(3), w, gain, n0))
+    assert np.all(alpha == 0.0)

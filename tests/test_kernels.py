@@ -1,0 +1,217 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.partition_sweep import partition_sweep_pallas
+from repro.kernels.rglru_scan import rglru_scan_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,window", [("causal", 0), ("local", 96),
+                                         ("full", 0)])
+@pytest.mark.parametrize("b,s,h,kv,hd", [(2, 256, 8, 4, 64), (1, 128, 4, 1, 128),
+                                         (2, 192, 6, 2, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(kind, window, b, s, h, kv, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    got = flash_attention_pallas(q, k, v, kind=kind, window=window,
+                                 q_block=64, k_block=64, interpret=True)
+    want = ref.attention_ref(q, k, v, mask=ref.build_mask(kind, s, s, window))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shape_sweep():
+    b, s, h, kv, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    want = ref.attention_ref(q, k, v, mask=ref.build_mask("causal", s, s))
+    for qb, kb in [(32, 64), (64, 32), (128, 128), (256, 64)]:
+        got = flash_attention_pallas(q, k, v, kind="causal", q_block=qb,
+                                     k_block=kb, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_reference_matches_dense():
+    """The XLA lowering path (attention_blocked) against the dense oracle."""
+    b, s, h, kv, hd = 2, 320, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    for kind, window in [("causal", 0), ("local", 64), ("full", 0)]:
+        got = ref.attention_blocked(q, k, v, kind=kind, window=window,
+                                    q_block=64)
+        want = ref.attention_ref(q, k, v,
+                                 mask=ref.build_mask(kind, s, s, window))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5, err_msg=kind)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [(2, 256, 8, 4, 64), (1, 512, 4, 1, 128),
+                                         (3, 128, 2, 2, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, s, h, kv, hd, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, 1, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    # ragged validity (ring-buffer style)
+    lengths = jax.random.randint(ks[3], (b,), 1, s)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    got = decode_attention_pallas(q, k, v, valid_mask=valid, k_block=64,
+                                  interpret=True)
+    want = ref.decode_attention_ref(q, k, v, valid_mask=valid)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (mamba2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 64, 4, 16, 2, 8, 16),
+    (1, 128, 2, 32, 1, 16, 32),
+    (2, 96, 3, 16, 3, 8, 24),
+])
+def test_ssd_scan(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, h))
+    bm = jax.random.normal(ks[2], (b, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    d = jnp.linspace(0.5, 1.5, h)
+    y_p, st_p = ssd_scan_pallas(x, dt, a_log, bm, cm, d, chunk=chunk,
+                                interpret=True)
+    y_r, st_r = ref.ssd_scan_ref(x, dt, a_log, bm, cm, d, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_p), np.asarray(st_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_step_consistency():
+    """Sequential ssd_step_ref over a sequence == chunked scan."""
+    b, s, h, p, g, n = 1, 32, 2, 8, 1, 4
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    bm = jax.random.normal(ks[2], (b, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    d = jnp.ones((h,))
+    y_scan, final = ref.ssd_scan_ref(x, dt, a_log, bm, cm, d, chunk=8)
+    state = jnp.zeros((b, h, n, p))
+    ys = []
+    for t in range(s):
+        y_t, state = ref.ssd_step_ref(state, x[:, t], dt[:, t], a_log,
+                                      bm[:, t], cm[:, t], d)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_scan),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(final),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,r,chunk", [(2, 128, 64, 32), (1, 64, 128, 64),
+                                         (3, 256, 32, 128)])
+def test_rglru_scan(b, s, r, chunk):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (b, s, r)) * 0.3
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, r)) + 2.0)
+    got = rglru_scan_pallas(x, a, chunk=chunk, interpret=True)
+    want = ref.rglru_scan_ref(x, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_scan_sequential_oracle():
+    """associative_scan oracle vs a plain python recurrence."""
+    b, s, r = 1, 16, 8
+    ks = jax.random.split(KEY, 2)
+    x = np.asarray(jax.random.normal(ks[0], (b, s, r)))
+    a = np.asarray(jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, r))))
+    h = np.zeros((b, r))
+    expected = []
+    for t in range(s):
+        h = a[:, t] * h + x[:, t]
+        expected.append(h.copy())
+    expected = np.stack(expected, 1)
+    got = ref.rglru_scan_ref(jnp.asarray(x), jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(got), expected, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# partition sweep (the paper's kernel)
+# ---------------------------------------------------------------------------
+
+def _sweep_args(seed=3, q_off=5.0):
+    from repro.core.env import paper_env
+    env = paper_env()
+    st = env.reset(jax.random.PRNGKey(seed))
+    c = env.cfg
+    scalars = dict(rho=c.rho, kappa=c.kappa, p_tx=c.p_tx, w_hz=c.w_hz,
+                   n0=c.n0, f_max_ue=c.f_max_ue, f_max_es=c.f_max_es, v=c.v,
+                   gamma_ue=c.gamma_ue, gamma_es=c.gamma_es,
+                   stability_margin=c.stability_margin)
+    b = env.batch
+    f32 = lambda t: jnp.asarray(t, jnp.float32)
+    return (f32(b.macs), f32(b.param_bytes), f32(b.act_bytes), f32(b.psi),
+            env.L, st.lam, st.gain, st.queues.energy + q_off,
+            st.queues.memory + q_off), scalars
+
+
+@pytest.mark.parametrize("seed,q_off", [(3, 5.0), (7, 0.0), (11, 120.0)])
+def test_partition_sweep(seed, q_off):
+    args, scalars = _sweep_args(seed, q_off)
+    want = np.asarray(ref.partition_sweep_ref(*args, scalars))
+    got = np.asarray(partition_sweep_pallas(*args, scalars, interpret=True))
+    feasible = want < 1e29
+    np.testing.assert_allclose(got[feasible], want[feasible],
+                               rtol=1e-4, atol=1e-3)
+    assert ((got > 1e29) == ~feasible).all()
+    assert (np.argmin(got, 1) == np.argmin(want, 1)).all()
+
+
+def test_partition_sweep_padding():
+    """Non-multiple UE counts go through the padding path."""
+    args, scalars = _sweep_args()
+    got = partition_sweep_pallas(*args, scalars, ue_block=4, interpret=True)
+    want = ref.partition_sweep_ref(*args, scalars)
+    feasible = np.asarray(want) < 1e29
+    np.testing.assert_allclose(np.asarray(got)[feasible],
+                               np.asarray(want)[feasible], rtol=1e-4, atol=1e-3)

@@ -1,0 +1,167 @@
+"""MoE dispatch semantics, data-pipeline determinism, roofline estimators."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import DataConfig, SyntheticStream, for_arch
+from repro.launch import specs
+from repro.models import ffn
+from repro.profiling import roofline as rl
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"), capacity_factor=8.0)
+    params = ffn.init_moe(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_moe_no_drop_matches_dense_mixture(moe_setup):
+    """With no-drop capacity, the GShard dispatch must equal the explicit
+    per-token mixture of its top-k experts."""
+    cfg, p = moe_setup
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 8, cfg.d_model))
+    y, aux = ffn.apply_moe(p, cfg, x)
+
+    # explicit dense computation
+    tokens = x.reshape(-1, cfg.d_model)
+    logits = tokens.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    k = cfg.top_k
+    top_idx = jnp.argsort(-probs, axis=-1)[:, :k]
+    top_p = jnp.take_along_axis(probs, top_idx, -1)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    outs = []
+    for e in range(cfg.n_experts):
+        h = tokens @ p["wi"][e]
+        h = jax.nn.silu(h) * (tokens @ p["wg"][e])
+        outs.append(h @ p["wo"][e])
+    outs = jnp.stack(outs, 1)                      # (T, E, D)
+    want = jnp.zeros_like(tokens)
+    for j in range(k):
+        sel = jnp.take_along_axis(
+            outs, top_idx[:, j][:, None, None].repeat(cfg.d_model, -1), 1)[:, 0]
+        want = want + top_p[:, j:j + 1] * sel
+    if "shared" in p:
+        want = want + ffn.apply_ffn(p["shared"], cfg, tokens)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(want), rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """Tight capacity must drop overflow tokens (output != no-drop output)."""
+    base = reduced(get_config("llama4-maverick-400b-a17b"))
+    tight = dataclasses.replace(base, capacity_factor=0.25)
+    loose = dataclasses.replace(base, capacity_factor=8.0)
+    p = ffn.init_moe(jax.random.PRNGKey(0), loose)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, base.d_model))
+    y_tight, _ = ffn.apply_moe(p, tight, x)
+    y_loose, _ = ffn.apply_moe(p, loose, x)
+    assert float(jnp.max(jnp.abs(y_tight - y_loose))) > 1e-4
+
+
+def test_moe_aux_loss_prefers_balance(moe_setup):
+    """Uniform routing yields the minimal load-balance loss (= 1)."""
+    cfg, p = moe_setup
+    # force a router that sends everything to expert 0
+    p_skew = dict(p)
+    p_skew["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+    # positive inputs so the skewed router's logit for expert 0 dominates
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(2),
+                                  (2, 64, cfg.d_model))) + 0.1
+    _, aux_skew = ffn.apply_moe(p_skew, cfg, x)
+    _, aux_learn = ffn.apply_moe(p, cfg, x)
+    assert float(aux_skew) > float(aux_learn)
+    assert float(aux_skew) == pytest.approx(cfg.n_experts, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_stream_deterministic_per_step():
+    s1 = SyntheticStream(DataConfig(batch=4, seq=16, vocab=97, seed=3))
+    s2 = SyntheticStream(DataConfig(batch=4, seq=16, vocab=97, seed=3))
+    b1, b2 = s1.get_batch(42), s2.get_batch(42)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = s1.get_batch(43)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_stream_targets_shifted():
+    s = SyntheticStream(DataConfig(batch=2, seq=8, vocab=50, seed=0))
+    b = s.get_batch(0)
+    assert b["tokens"].shape == b["targets"].shape == (2, 8)
+    assert int(b["tokens"].max()) < 50
+
+
+def test_stream_modality_stubs():
+    vlm = for_arch(get_config("llama-3.2-vision-90b"), batch=2, seq=16)
+    b = vlm.get_batch(0)
+    assert b["image_embeds"].shape == (2, 1024, 8192)
+    audio = for_arch(get_config("seamless-m4t-large-v2"), batch=2, seq=16)
+    b = audio.get_batch(0)
+    assert b["src_embeds"].shape == (2, 16, 1024)
+    assert b["tokens"].shape[1] == max(16 // 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# roofline estimators
+# ---------------------------------------------------------------------------
+
+def test_param_count_matches_model_zoo():
+    """Analytic param counts == actual init() counts on reduced configs."""
+    from repro.models import transformer
+    for name in ("qwen3-0.6b", "moonshot-v1-16b-a3b", "mamba2-1.3b",
+                 "recurrentgemma-2b", "seamless-m4t-large-v2"):
+        cfg = reduced(get_config(name))
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        actual = transformer.param_count(params)
+        est = rl.param_count(cfg)
+        # estimator ignores norms/small biases: within 6%
+        assert abs(est - actual) / actual < 0.06, (name, est, actual)
+
+
+def test_moe_active_less_than_total():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    total = rl.param_count(cfg)
+    active = rl.param_count(cfg, active_only=True)
+    assert total == pytest.approx(400e9, rel=0.05)
+    assert active == pytest.approx(18e9, rel=0.35)
+    assert active < total / 15
+
+
+def test_flops_scaling_laws():
+    cfg = get_config("qwen3-0.6b")
+    s1 = rl.step_flops(cfg, specs.SHAPES["train_4k"], "train")
+    # 6ND within sanity for dense train
+    n = rl.param_count(cfg, active_only=True)
+    d = 256 * 4096
+    assert s1["model"] == pytest.approx(6 * n * d, rel=1e-6)
+    assert s1["executed"] > s1["model"] / 2  # remat+attention bounded waste
+    # decode executed flops: >= weight term 2N/token; cache attention adds
+    # 4*S*h*hd per layer (dominant for a small model at a 32k cache)
+    sd = rl.step_flops(cfg, specs.SHAPES["decode_32k"], "decode")
+    weight_term = 2 * n * 128
+    attn_term = 4 * 32768 * cfg.n_heads * cfg.resolved_head_dim \
+        * cfg.n_layers * 128
+    assert sd["executed"] == pytest.approx(
+        weight_term + attn_term + 2 * cfg.d_model * cfg.vocab * 128, rel=0.05)
+
+
+def test_decode_memory_dominated_by_weights_and_cache():
+    cfg = get_config("qwen1.5-110b")
+    hbm = rl.step_hbm_bytes(cfg, specs.SHAPES["decode_32k"], "decode")
+    p_bytes = rl.param_count(cfg) * 2
+    assert hbm > p_bytes                      # weights read at least once
+    assert hbm < p_bytes * 10                 # but not absurdly more

@@ -1,0 +1,75 @@
+"""Queueing-model correctness: analytical eq. (2) vs discrete-event simulation."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queueing
+
+
+def simulate_md1(lam: float, mu: float, n_tasks: int, seed: int = 0) -> float:
+    """Discrete-event M/D/1: Poisson arrivals, deterministic service 1/mu."""
+    rng = np.random.default_rng(seed)
+    inter = rng.exponential(1.0 / lam, n_tasks)
+    arrivals = np.cumsum(inter)
+    service = 1.0 / mu
+    finish = np.empty(n_tasks)
+    prev_finish = 0.0
+    for i in range(n_tasks):
+        start = max(arrivals[i], prev_finish)
+        prev_finish = start + service
+        finish[i] = prev_finish
+    return float(np.mean(finish - arrivals))
+
+
+@pytest.mark.parametrize("lam,mu", [(0.5, 2.0), (2.5, 4.0), (1.0, 10.0)])
+def test_md1_matches_simulation(lam, mu):
+    analytical = float(queueing.md1_sojourn(lam, mu))
+    simulated = simulate_md1(lam, mu, n_tasks=200_000)
+    assert analytical == pytest.approx(simulated, rel=0.03)
+
+
+def test_md1_components():
+    # service-only limit: lam -> 0 gives pure processing delay 1/mu
+    assert float(queueing.md1_sojourn(1e-9, 4.0)) == pytest.approx(0.25, rel=1e-4)
+    # heavy traffic blows up
+    assert float(queueing.md1_sojourn(3.999, 4.0)) > 100.0
+
+
+@given(lam=st.floats(0.1, 3.0), d=st.floats(1e6, 5e8), f=st.floats(1e9, 3e9))
+@settings(max_examples=50, deadline=None)
+def test_ue_sojourn_positive_and_monotone_in_f(lam, d, f):
+    if f / d <= lam * 1.05:  # keep the queue stable
+        return
+    t1 = float(queueing.ue_sojourn(lam, f, d))
+    t2 = float(queueing.ue_sojourn(lam, f * 1.1, d))
+    assert t1 > 0 and t2 > 0 and t2 < t1  # more CPU -> strictly less delay
+
+
+def test_zero_portions_cost_nothing():
+    assert float(queueing.ue_sojourn(1.0, 0.0, 0.0)) == 0.0
+    assert float(queueing.es_sojourn(0.0, 0.0)) == 0.0
+    assert float(queueing.trans_delay(0.0, 0.5, 5e6, 0.1, 1e-11, 4e-21)) == 0.0
+
+
+def test_shannon_rate_alpha_zero():
+    assert float(queueing.shannon_rate(0.0, 5e6, 0.1, 1e-11, 4e-21)) == 0.0
+    r1 = float(queueing.shannon_rate(0.3, 5e6, 0.1, 1e-11, 4e-21))
+    r2 = float(queueing.shannon_rate(0.6, 5e6, 0.1, 1e-11, 4e-21))
+    assert 0 < r1 < r2  # more bandwidth -> more rate
+
+
+def test_rate_concavity_in_alpha():
+    alphas = np.linspace(0.05, 1.0, 20)
+    rates = np.array([float(queueing.shannon_rate(a, 5e6, 0.1, 1.6e-11, 4e-21))
+                      for a in alphas])
+    second_diff = np.diff(rates, 2)
+    assert np.all(second_diff < 1e-3)  # concave (convexity basis of P5)
+
+
+def test_gd1_correction_exceeds_deterministic():
+    """The beyond-paper G/D/1 edge model adds a nonnegative queueing term."""
+    lam, f_es, d_es = 2.0, 3e9, 1e9
+    base = float(queueing.es_sojourn(f_es, d_es))
+    corrected = float(queueing.es_sojourn_gd1(lam, f_es, d_es, rho_ue=0.5))
+    assert corrected >= base
