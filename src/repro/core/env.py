@@ -7,6 +7,15 @@ action: feasibility projection (C7), convex resource allocation (P3-P5),
 delay/energy/memory evaluation (eqs. 1-6), reward (14) and virtual-queue
 updates (8)-(9).
 
+Two equivalent entry points:
+
+* ``MecEnv`` -- the object API (holds constants, convenient for single-cell
+  training/eval scripts and the seed tests);
+* ``MecParams`` + the module-level ``*_p`` pure functions -- the params-first
+  API.  ``MecParams`` is a registered pytree, so a stack of B cells is just a
+  ``jax.tree.map(jnp.stack, ...)`` of per-cell params, and ``jax.vmap`` over
+  ``step_p`` evaluates all cells at once (see ``repro.core.scenarios``).
+
 Simulation constants default to the paper's Table I / Sec. V-A setup.
 """
 from __future__ import annotations
@@ -62,6 +71,130 @@ class MecConfig:
     queue_obs_scale: float = 1e-2     # observation scaling for Q/W entries
 
 
+# Scalar MecConfig fields carried into MecParams as traced 0-d arrays (so a
+# stacked batch can vary them per cell).  ``edge_queueing`` stays static: it
+# selects a Python-level branch in ``_evaluate_p``.
+_FLOAT_FIELDS = ("w_hz", "n0", "p_tx", "rho", "kappa", "f_max_ue", "f_max_es",
+                 "v", "nu_e", "nu_c", "gamma_ue", "gamma_es", "lam_low",
+                 "lam_high", "peak_boost", "stability_margin",
+                 "queue_obs_scale")
+_INT_FIELDS = ("lam_mode", "peak_start", "peak_stop")
+
+_PARAMS_DATA = (
+    # raw per-layer tables, (N, C) -- kept for the Pallas sweep kernel route
+    "macs", "param_bytes", "act_bytes",
+    # per-cut tables, (N, C)
+    "prefix_macs", "suffix_macs", "psi", "prefix_params", "suffix_params",
+    "prefix_act_max", "suffix_act_max",
+    # per-UE vectors, (N,)
+    "L", "e_budget", "c_budget", "lam_fixed",
+    # per-cell scalars, 0-d (stack to (B,))
+    "mean_gain",
+) + _FLOAT_FIELDS + _INT_FIELDS
+
+
+@dataclasses.dataclass(frozen=True)
+class MecParams:
+    """Everything ``step_p`` reads, as one pytree of arrays.
+
+    All leaves are per-cell: tables are (N, C), vectors (N,), scalars 0-d.
+    ``jnp.stack``-ing B instances (``repro.core.scenarios.stack_params``)
+    yields a (B, ...) batch that ``jax.vmap`` maps back to this layout.
+    """
+
+    macs: jax.Array
+    param_bytes: jax.Array
+    act_bytes: jax.Array
+    prefix_macs: jax.Array
+    suffix_macs: jax.Array
+    psi: jax.Array
+    prefix_params: jax.Array
+    suffix_params: jax.Array
+    prefix_act_max: jax.Array
+    suffix_act_max: jax.Array
+    L: jax.Array
+    e_budget: jax.Array
+    c_budget: jax.Array
+    lam_fixed: jax.Array
+    mean_gain: jax.Array
+    w_hz: jax.Array
+    n0: jax.Array
+    p_tx: jax.Array
+    rho: jax.Array
+    kappa: jax.Array
+    f_max_ue: jax.Array
+    f_max_es: jax.Array
+    v: jax.Array
+    nu_e: jax.Array
+    nu_c: jax.Array
+    gamma_ue: jax.Array
+    gamma_es: jax.Array
+    lam_low: jax.Array
+    lam_high: jax.Array
+    peak_boost: jax.Array
+    stability_margin: jax.Array
+    queue_obs_scale: jax.Array
+    lam_mode: jax.Array
+    peak_start: jax.Array
+    peak_stop: jax.Array
+    edge_queueing: bool = False
+
+    @property
+    def n_ue(self) -> int:
+        return self.L.shape[-1]
+
+    @property
+    def num_cuts(self) -> int:
+        return self.prefix_macs.shape[-1]
+
+    @property
+    def obs_dim(self) -> int:
+        return 4 * self.n_ue
+
+
+jax.tree_util.register_dataclass(
+    MecParams, data_fields=list(_PARAMS_DATA), meta_fields=["edge_queueing"])
+
+
+def make_params(profiles: Sequence[LayerProfile], cfg: MecConfig,
+                e_budget: Sequence[float], c_budget: Sequence[float],
+                mean_gain: float | None = None,
+                lam_fixed: Sequence[float] | None = None) -> MecParams:
+    """Build a single-cell MecParams from profiles + scenario constants."""
+    batch = ProfileBatch(profiles)
+    n = batch.n
+    as_f32 = lambda a: jnp.asarray(a, jnp.float32)
+    e_budget = as_f32(e_budget)
+    c_budget = as_f32(c_budget)
+    if e_budget.shape != (n,) or c_budget.shape != (n,):
+        raise ValueError("budgets must have one entry per UE")
+    fields = dict(
+        macs=as_f32(batch.macs),
+        param_bytes=as_f32(batch.param_bytes),
+        act_bytes=as_f32(batch.act_bytes),
+        prefix_macs=as_f32(batch.prefix_macs),
+        suffix_macs=as_f32(batch.suffix_macs),
+        psi=as_f32(batch.psi),
+        prefix_params=as_f32(batch.prefix_params),
+        suffix_params=as_f32(batch.suffix_params),
+        prefix_act_max=as_f32(batch.prefix_act_max),
+        suffix_act_max=as_f32(batch.suffix_act_max),
+        L=jnp.asarray(batch.L, jnp.int32),
+        e_budget=e_budget,
+        c_budget=c_budget,
+        lam_fixed=as_f32(np.full(n, cfg.lam_high) if lam_fixed is None
+                         else lam_fixed),
+        mean_gain=jnp.float32(free_space_gain() if mean_gain is None
+                              else mean_gain),
+        edge_queueing=cfg.edge_queueing,
+    )
+    for f in _FLOAT_FIELDS:
+        fields[f] = jnp.float32(getattr(cfg, f))
+    for f in _INT_FIELDS:
+        fields[f] = jnp.int32(getattr(cfg, f))
+    return MecParams(**fields)
+
+
 class MecState(NamedTuple):
     key: jax.Array
     t: jax.Array            # slot index, int32
@@ -88,11 +221,135 @@ class SlotResult(NamedTuple):
     q_memory: jax.Array
 
 
+# ---------------------------------------------------------------------------
+# Params-first pure API (the batched / vmap path)
+# ---------------------------------------------------------------------------
+
+def observe_p(p: MecParams, state: MecState) -> jax.Array:
+    """s^t = {h, lambda, Q, W} (Sec. IV-B1), scaled to O(1)."""
+    return jnp.concatenate([
+        state.gain / p.mean_gain,
+        state.lam,
+        p.queue_obs_scale * state.queues.energy,
+        p.queue_obs_scale * state.queues.memory,
+    ])
+
+
+def _draw_p(p: MecParams, key, t):
+    k_gain, k_lam = jax.random.split(key)
+    beta = jax.random.exponential(k_gain, (p.n_ue,), jnp.float32)
+    gain = beta * p.mean_gain  # Rayleigh fading power
+    u = jax.random.uniform(k_lam, (p.n_ue,), jnp.float32,
+                           p.lam_low, p.lam_high)
+    in_peak = jnp.logical_and(t >= p.peak_start, t < p.peak_stop)
+    peak = p.lam_fixed + jnp.where(in_peak, p.peak_boost, 0.0)
+    lam = jax.lax.switch(
+        jnp.int32(p.lam_mode),
+        [lambda: u, lambda: p.lam_fixed, lambda: peak])
+    return gain, lam
+
+
+def reset_p(p: MecParams, key: jax.Array) -> MecState:
+    key, sub = jax.random.split(key)
+    gain, lam = _draw_p(p, sub, jnp.int32(0))
+    return MecState(key=key, t=jnp.int32(0), gain=gain, lam=lam,
+                    queues=VirtualQueues.zeros(p.n_ue))
+
+
+def max_feasible_cut_p(p: MecParams, lam: jax.Array) -> jax.Array:
+    """Largest cut whose local queue is stable: rho*prefix*lam < f_max (C7)."""
+    demand = p.rho * p.prefix_macs * lam[:, None] * (1.0 + p.stability_margin)
+    feasible = demand < p.f_max_ue          # (N, C); monotone in cut
+    return jnp.minimum(jnp.sum(feasible, axis=1) - 1, p.L)
+
+
+def project_cut_p(p: MecParams, cut: jax.Array, lam: jax.Array) -> jax.Array:
+    return jnp.clip(cut, 0, max_feasible_cut_p(p, lam)).astype(jnp.int32)
+
+
+def _gather(table: jax.Array, cut: jax.Array) -> jax.Array:
+    return jnp.take_along_axis(table, cut[:, None], axis=1)[:, 0]
+
+
+def step_p(p: MecParams, state: MecState,
+           cut: jax.Array) -> tuple[MecState, SlotResult]:
+    """LyMDO inner loop: partitioning action + exact convex allocation."""
+    cut = project_cut_p(p, cut, state.lam)
+    d_ue = p.rho * _gather(p.prefix_macs, cut)
+    d_es = p.rho * _gather(p.suffix_macs, cut)
+    psi = _gather(p.psi, cut)
+
+    q = state.queues
+    f_es = convex.solve_p4(d_es, p.f_max_es)
+    f_ue = convex.solve_p3(q.energy, p.kappa, d_ue, state.lam, p.v,
+                           p.f_max_ue, stability_margin=p.stability_margin)
+    alpha = convex.solve_p5(q.energy, p.p_tx, state.lam, p.v, psi,
+                            p.w_hz, state.gain, p.n0)
+    return _evaluate_p(p, state, cut, alpha, f_ue, f_es, d_ue, d_es, psi)
+
+
+def step_joint_p(p: MecParams, state: MecState, cut: jax.Array,
+                 alpha: jax.Array, f_ue: jax.Array,
+                 f_es: jax.Array) -> tuple[MecState, SlotResult]:
+    """Paper's "PPO" baseline: all four decisions come from the agent.
+
+    Only hard physics is enforced: C7 projection on the cut and a clamp of
+    f_ue into the stable band (a near-boundary f_ue still yields the huge
+    queuing delays the paper describes in Fig. 3's discussion).
+    """
+    cut = project_cut_p(p, cut, state.lam)
+    d_ue = p.rho * _gather(p.prefix_macs, cut)
+    d_es = p.rho * _gather(p.suffix_macs, cut)
+    psi = _gather(p.psi, cut)
+    lo = jnp.where(d_ue > 0,
+                   d_ue * state.lam * (1.0 + p.stability_margin) + 1.0, 0.0)
+    f_ue = jnp.clip(f_ue, lo, p.f_max_ue)
+    f_ue = jnp.where(d_ue > 0, f_ue, 0.0)
+    f_es = jnp.where(d_es > 0, f_es, 0.0)
+    alpha = jnp.where(psi > 0, alpha, 0.0)
+    return _evaluate_p(p, state, cut, alpha, f_ue, f_es, d_ue, d_es, psi)
+
+
+def _evaluate_p(p: MecParams, state, cut, alpha, f_ue, f_es, d_ue, d_es, psi):
+    q = state.queues
+    delay, (t_ue, t_tx, t_es) = queueing.e2e_delay(
+        state.lam, f_ue, f_es, d_ue, d_es, psi, alpha,
+        p.w_hz, p.p_tx, state.gain, p.n0, edge_queueing=p.edge_queueing)
+
+    energy = energymem.ue_energy(f_ue, d_ue, state.lam, p.kappa, p.p_tx, t_tx)
+    mem = energymem.memory_cost(
+        _gather(p.prefix_params, cut),
+        _gather(p.suffix_params, cut),
+        _gather(p.prefix_act_max, cut),
+        _gather(p.suffix_act_max, cut),
+        p.gamma_ue, p.gamma_es)
+
+    rew = lyapunov_reward(q, energy, mem, delay, p.v)
+    new_queues = update_queues(q, energy, mem, p.e_budget, p.c_budget,
+                               p.nu_e, p.nu_c)
+
+    key, sub = jax.random.split(state.key)
+    t_next = state.t + 1
+    gain, lam = _draw_p(p, sub, t_next)
+    new_state = MecState(key=key, t=t_next, gain=gain, lam=lam,
+                         queues=new_queues)
+    result = SlotResult(
+        reward=rew, delay=delay, t_ue=t_ue, t_tx=t_tx, t_es=t_es,
+        energy=energy, mem_cost=mem, cut=cut, alpha=alpha,
+        f_ue=f_ue, f_es=f_es,
+        q_energy=q.energy, q_memory=q.memory)
+    return new_state, result
+
+
+# ---------------------------------------------------------------------------
+# Object API (thin wrapper; single-cell scripts and the seed tests use this)
+# ---------------------------------------------------------------------------
+
 class MecEnv:
     """N-UE cooperative-inference environment over a ProfileBatch.
 
-    All methods are pure; the instance only holds constants, so jitting
-    ``env.step`` (or closing over it in a scan) is safe.
+    All methods are pure; the instance only holds constants (a ``MecParams``
+    pytree), so jitting ``env.step`` (or closing over it in a scan) is safe.
     """
 
     def __init__(self, profiles: Sequence[LayerProfile], cfg: MecConfig,
@@ -101,27 +358,22 @@ class MecEnv:
                  lam_fixed: Sequence[float] | None = None):
         self.cfg = cfg
         self.batch = ProfileBatch(profiles)
-        n = self.batch.n
-        as_f32 = lambda a: jnp.asarray(a, jnp.float32)
-        self.n_ue = n
-        self.num_cuts = self.batch.Lmax + 1
-        self.L = jnp.asarray(self.batch.L, jnp.int32)
-        self.prefix_macs = as_f32(self.batch.prefix_macs)
-        self.suffix_macs = as_f32(self.batch.suffix_macs)
-        self.psi = as_f32(self.batch.psi)
-        self.prefix_params = as_f32(self.batch.prefix_params)
-        self.suffix_params = as_f32(self.batch.suffix_params)
-        self.prefix_act_max = as_f32(self.batch.prefix_act_max)
-        self.suffix_act_max = as_f32(self.batch.suffix_act_max)
-        self.e_budget = as_f32(e_budget)
-        self.c_budget = as_f32(c_budget)
-        if self.e_budget.shape != (n,) or self.c_budget.shape != (n,):
-            raise ValueError("budgets must have one entry per UE")
-        self.mean_gain = jnp.float32(
-            free_space_gain() if mean_gain is None else mean_gain)
-        self.lam_fixed = as_f32(
-            np.full(n, cfg.lam_high) if lam_fixed is None else lam_fixed)
+        self.params = make_params(profiles, cfg, e_budget, c_budget,
+                                  mean_gain=mean_gain, lam_fixed=lam_fixed)
         # Max feasible cut per (UE, lambda) is recomputed each slot (C7).
+        # Tables/budgets are exposed as read-only properties onto
+        # self.params (below) so they can never diverge from what step()
+        # actually uses; mutate via e.g. ``env.lam_fixed = ...`` (setter)
+        # or ``dataclasses.replace(env.params, ...)``.
+
+    @property
+    def lam_fixed(self) -> jax.Array:
+        return self.params.lam_fixed
+
+    @lam_fixed.setter
+    def lam_fixed(self, value):
+        self.params = dataclasses.replace(
+            self.params, lam_fixed=jnp.asarray(value, jnp.float32))
 
     # -- observation ------------------------------------------------------
 
@@ -134,123 +386,38 @@ class MecEnv:
         return self.n_ue
 
     def observe(self, state: MecState) -> jax.Array:
-        """s^t = {h, lambda, Q, W} (Sec. IV-B1), scaled to O(1)."""
-        c = self.cfg
-        return jnp.concatenate([
-            state.gain / self.mean_gain,
-            state.lam,
-            c.queue_obs_scale * state.queues.energy,
-            c.queue_obs_scale * state.queues.memory,
-        ])
-
-    # -- exogenous processes ----------------------------------------------
-
-    def _draw(self, key, t):
-        c = self.cfg
-        k_gain, k_lam = jax.random.split(key)
-        beta = jax.random.exponential(k_gain, (self.n_ue,), jnp.float32)
-        gain = beta * self.mean_gain  # Rayleigh fading power
-        u = jax.random.uniform(k_lam, (self.n_ue,), jnp.float32,
-                               c.lam_low, c.lam_high)
-        in_peak = jnp.logical_and(t >= c.peak_start, t < c.peak_stop)
-        peak = self.lam_fixed + jnp.where(in_peak, c.peak_boost, 0.0)
-        lam = jax.lax.switch(
-            jnp.int32(c.lam_mode),
-            [lambda: u, lambda: self.lam_fixed, lambda: peak])
-        return gain, lam
+        return observe_p(self.params, state)
 
     def reset(self, key: jax.Array) -> MecState:
-        key, sub = jax.random.split(key)
-        gain, lam = self._draw(sub, jnp.int32(0))
-        return MecState(key=key, t=jnp.int32(0), gain=gain, lam=lam,
-                        queues=VirtualQueues.zeros(self.n_ue))
+        return reset_p(self.params, key)
 
     # -- feasibility (C7) --------------------------------------------------
 
     def max_feasible_cut(self, lam: jax.Array) -> jax.Array:
-        """Largest cut whose local queue is stable: rho*prefix*lam < f_max."""
-        c = self.cfg
-        demand = c.rho * self.prefix_macs * lam[:, None] * (1.0 + c.stability_margin)
-        feasible = demand < c.f_max_ue          # (N, C); monotone in cut
-        return jnp.minimum(jnp.sum(feasible, axis=1) - 1, self.L)
+        return max_feasible_cut_p(self.params, lam)
 
     def project_cut(self, cut: jax.Array, lam: jax.Array) -> jax.Array:
-        return jnp.clip(cut, 0, self.max_feasible_cut(lam)).astype(jnp.int32)
-
-    # -- per-cut gathers ----------------------------------------------------
-
-    def _gather(self, table: jax.Array, cut: jax.Array) -> jax.Array:
-        return jnp.take_along_axis(table, cut[:, None], axis=1)[:, 0]
+        return project_cut_p(self.params, cut, lam)
 
     # -- one slot -----------------------------------------------------------
 
     def step(self, state: MecState, cut: jax.Array) -> tuple[MecState, SlotResult]:
-        """LyMDO inner loop: partitioning action + exact convex allocation."""
-        c = self.cfg
-        cut = self.project_cut(cut, state.lam)
-        d_ue = c.rho * self._gather(self.prefix_macs, cut)
-        d_es = c.rho * self._gather(self.suffix_macs, cut)
-        psi = self._gather(self.psi, cut)
-
-        q = state.queues
-        f_es = convex.solve_p4(d_es, c.f_max_es)
-        f_ue = convex.solve_p3(q.energy, c.kappa, d_ue, state.lam, c.v,
-                               c.f_max_ue, stability_margin=c.stability_margin)
-        alpha = convex.solve_p5(q.energy, c.p_tx, state.lam, c.v, psi,
-                                c.w_hz, state.gain, c.n0)
-        return self._evaluate(state, cut, alpha, f_ue, f_es, d_ue, d_es, psi)
+        return step_p(self.params, state, cut)
 
     def step_joint(self, state: MecState, cut: jax.Array, alpha: jax.Array,
                    f_ue: jax.Array, f_es: jax.Array) -> tuple[MecState, SlotResult]:
-        """Paper's "PPO" baseline: all four decisions come from the agent.
+        return step_joint_p(self.params, state, cut, alpha, f_ue, f_es)
 
-        Only hard physics is enforced: C7 projection on the cut and a clamp of
-        f_ue into the stable band (a near-boundary f_ue still yields the huge
-        queuing delays the paper describes in Fig. 3's discussion).
-        """
-        c = self.cfg
-        cut = self.project_cut(cut, state.lam)
-        d_ue = c.rho * self._gather(self.prefix_macs, cut)
-        d_es = c.rho * self._gather(self.suffix_macs, cut)
-        psi = self._gather(self.psi, cut)
-        lo = jnp.where(d_ue > 0,
-                       d_ue * state.lam * (1.0 + c.stability_margin) + 1.0, 0.0)
-        f_ue = jnp.clip(f_ue, lo, c.f_max_ue)
-        f_ue = jnp.where(d_ue > 0, f_ue, 0.0)
-        f_es = jnp.where(d_es > 0, f_es, 0.0)
-        alpha = jnp.where(psi > 0, alpha, 0.0)
-        return self._evaluate(state, cut, alpha, f_ue, f_es, d_ue, d_es, psi)
 
-    def _evaluate(self, state, cut, alpha, f_ue, f_es, d_ue, d_es, psi):
-        c = self.cfg
-        q = state.queues
-        delay, (t_ue, t_tx, t_es) = queueing.e2e_delay(
-            state.lam, f_ue, f_es, d_ue, d_es, psi, alpha,
-            c.w_hz, c.p_tx, state.gain, c.n0, edge_queueing=c.edge_queueing)
+def _delegate(name):
+    return property(lambda self: getattr(self.params, name),
+                    doc=f"Read-only view of ``params.{name}``.")
 
-        energy = energymem.ue_energy(f_ue, d_ue, state.lam, c.kappa, c.p_tx, t_tx)
-        mem = energymem.memory_cost(
-            self._gather(self.prefix_params, cut),
-            self._gather(self.suffix_params, cut),
-            self._gather(self.prefix_act_max, cut),
-            self._gather(self.suffix_act_max, cut),
-            c.gamma_ue, c.gamma_es)
 
-        rew = lyapunov_reward(q, energy, mem, delay, c.v)
-        new_queues = update_queues(q, energy, mem, self.e_budget, self.c_budget,
-                                   c.nu_e, c.nu_c)
-
-        key, sub = jax.random.split(state.key)
-        t_next = state.t + 1
-        gain, lam = self._draw(sub, t_next)
-        new_state = MecState(key=key, t=t_next, gain=gain, lam=lam,
-                             queues=new_queues)
-        result = SlotResult(
-            reward=rew, delay=delay, t_ue=t_ue, t_tx=t_tx, t_es=t_es,
-            energy=energy, mem_cost=mem, cut=cut, alpha=alpha,
-            f_ue=f_ue, f_es=f_es,
-            q_energy=q.energy, q_memory=q.memory)
-        return new_state, result
+for _f in ("n_ue", "num_cuts", "L", "prefix_macs", "suffix_macs", "psi",
+           "prefix_params", "suffix_params", "prefix_act_max",
+           "suffix_act_max", "e_budget", "c_budget", "mean_gain"):
+    setattr(MecEnv, _f, _delegate(_f))
 
 
 def paper_env(cfg: MecConfig = MecConfig(), n_alexnet: int = 2,

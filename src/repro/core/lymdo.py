@@ -202,3 +202,62 @@ def random_cut_fn(env: MecEnv):
 
 def oracle_cut_fn(env: MecEnv):
     return lambda st, key: sweep.oracle_cut(env, st)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-cell runners (see repro.core.scenarios): B cells x N UEs in a
+# single jitted lax.scan program instead of one Python loop per cell.
+# ---------------------------------------------------------------------------
+
+def run_fixed_batched(grid, policy="oracle", episodes: int = 1,
+                      steps: int = 200, seed: int = 0):
+    """Batched analogue of :func:`run_fixed` over a ``ScenarioGrid``.
+
+    ``policy`` is a ``scenarios.POLICIES`` name or a per-cell callable
+    ``(params, state, key) -> (N,) cuts``.  Returns (metrics, last_results):
+    metrics maps each summary name to a (B,) per-cell mean over episodes;
+    last_results is the final episode's (steps, B, N) SlotResult stack.
+    """
+    rollout = grid.make_rollout(policy, steps)
+    key = jax.random.PRNGKey(seed)
+    agg: dict[str, list] = {}
+    results = None
+    for _ in range(episodes):
+        key, k = jax.random.split(key)
+        _, results, summary = rollout(k)
+        for name, val in summary.items():
+            agg.setdefault(name, []).append(np.asarray(val))
+    return {k: np.mean(np.stack(v), axis=0) for k, v in agg.items()}, results
+
+
+def eval_policy_batched(grid, agent: PPO, train_state: TrainState,
+                        episodes: int = 1, steps: int = 200, seed: int = 1234):
+    """Deterministic-policy LyMDO evaluation across every cell of a grid.
+
+    The single trained agent (shared weights) acts per cell on that cell's
+    observation; all cells advance in one scan.  Cells must share the
+    agent's obs/action dims (guaranteed by ScenarioGrid's common UE count)
+    AND the per-UE layer counts the policy head was built with: ``to_cut``
+    maps actions onto the policy's own L, so a grid cell with deeper
+    profiles would silently never receive the deep cuts.
+    """
+    from .env import observe_p
+
+    pol_L = np.asarray(agent.policy.num_layers)
+    grid_L = np.asarray(grid.params.L)
+    if not np.array_equal(np.broadcast_to(pol_L, grid_L.shape), grid_L):
+        raise ValueError(
+            f"policy layer counts {pol_L} do not match every grid cell's L "
+            f"{grid_L}; eval_policy_batched needs cells with the profiles "
+            "the policy was trained for")
+
+    pi_params = train_state.params["pi"]
+
+    def act(params, state, key):
+        del key
+        obs = observe_p(params, state)
+        y = agent.policy.mean_action(pi_params, obs)
+        return agent.policy.to_cut(y)
+
+    return run_fixed_batched(grid, act, episodes=episodes, steps=steps,
+                             seed=seed)

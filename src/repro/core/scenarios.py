@@ -1,0 +1,450 @@
+"""Scenario registry + batched multi-cell evaluation engine.
+
+The paper evaluates one cell (N UEs, one ES, Table I constants).  Scaling the
+reproduction to "many cells x many UE populations x many arrival processes"
+needs two things:
+
+1. **A registry of named scenario constructors** -- each returns a
+   :class:`Scenario` (profiles + budgets + ``MecConfig`` + channel geometry)
+   so sweeps are declared by name/knobs instead of hand-built envs.  See
+   ``docs/scenarios.md`` for the catalogue and how to add one.
+
+2. **A batched engine** -- a :class:`ScenarioGrid` stacks B single-cell
+   ``MecParams`` pytrees into one (B, ...) pytree (``stack_params``) and
+   evaluates all cells with ``jax.vmap`` over the pure ``step_p`` /
+   ``objective_table_p`` functions, wrapped in a single ``lax.scan`` over
+   time slots.  One jitted program replaces the per-cell Python loop.
+
+The batched Oracle's hot inner loop (the (B, N, C) objective table) routes
+through the ``partition_sweep`` Pallas kernel on TPU (one launch for all
+cells, ``n_total`` pinned to the per-cell UE count) and falls back to the
+checked ``kernels.ref`` / pure-lax path elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..profiling.profiles import LayerProfile
+from . import sweep
+from .env import (LAM_FIXED, LAM_IID_UNIFORM, LAM_PEAK, MecConfig, MecEnv,
+                  MecParams, MecState, SlotResult, free_space_gain,
+                  make_params, reset_p, step_p)
+
+# Scalars the Pallas sweep kernel bakes in at compile time; the kernel route
+# is only available when these agree across every cell of a grid.
+_SWEEP_SCALARS = ("rho", "kappa", "p_tx", "w_hz", "n0", "f_max_ue",
+                  "f_max_es", "v", "gamma_ue", "gamma_es", "stability_margin")
+
+
+# ---------------------------------------------------------------------------
+# Scenario spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Declarative single-cell scenario: everything needed to build an env."""
+
+    name: str
+    cfg: MecConfig
+    profiles: tuple[LayerProfile, ...]
+    e_budget: tuple[float, ...]
+    c_budget: tuple[float, ...]
+    mean_gain: float | None = None          # None -> paper free-space default
+    lam_fixed: tuple[float, ...] | None = None
+    description: str = ""
+
+    @property
+    def n_ue(self) -> int:
+        return len(self.profiles)
+
+    def build(self) -> MecEnv:
+        return MecEnv(list(self.profiles), self.cfg, list(self.e_budget),
+                      list(self.c_budget), mean_gain=self.mean_gain,
+                      lam_fixed=None if self.lam_fixed is None
+                      else list(self.lam_fixed))
+
+    def params(self) -> MecParams:
+        return make_params(list(self.profiles), self.cfg, list(self.e_budget),
+                           list(self.c_budget), mean_gain=self.mean_gain,
+                           lam_fixed=None if self.lam_fixed is None
+                           else list(self.lam_fixed))
+
+    def sweep_scalars(self) -> dict:
+        """Host-side constants for the Pallas partition-sweep route."""
+        return {k: float(getattr(self.cfg, k)) for k in _SWEEP_SCALARS}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., Scenario]] = {}
+
+
+def register(name: str):
+    """Decorator: register a named scenario constructor."""
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"scenario {name!r} already registered")
+        _REGISTRY[name] = fn
+        fn.scenario_name = name
+        return fn
+    return deco
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make(name: str, **knobs) -> Scenario:
+    """Build a registered scenario by name (knobs forwarded verbatim)."""
+    try:
+        ctor = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have {names()}") from None
+    return ctor(**knobs)
+
+
+def describe() -> str:
+    lines = []
+    for name in names():
+        doc = (_REGISTRY[name].__doc__ or "").strip().splitlines()
+        lines.append(f"{name}: {doc[0] if doc else ''}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Built-in scenario constructors
+# ---------------------------------------------------------------------------
+
+def _paper_fleet(n_alexnet: int, n_resnet: int):
+    from ..profiling.convnets import alexnet_profile, resnet18_profile
+    profiles = ([alexnet_profile()] * n_alexnet
+                + [resnet18_profile()] * n_resnet)
+    e = (0.040,) * n_alexnet + (0.060,) * n_resnet
+    c = (0.100,) * n_alexnet + (0.030,) * n_resnet
+    return tuple(profiles), e, c
+
+
+@register("paper_table1")
+def paper_table1(n_alexnet: int = 2, n_resnet: int = 3,
+                 cfg: MecConfig = MecConfig()) -> Scenario:
+    """Paper Sec. V-A / Table I: 2x AlexNet + 3x ResNet18, iid-uniform rates."""
+    profiles, e, c = _paper_fleet(n_alexnet, n_resnet)
+    return Scenario(name="paper_table1", cfg=cfg, profiles=profiles,
+                    e_budget=e, c_budget=c,
+                    description="paper Table I single cell")
+
+
+@register("fixed_rate")
+def fixed_rate(rate: float = 2.5, n_alexnet: int = 2,
+               n_resnet: int = 3) -> Scenario:
+    """Fig. 4 sweep point: constant per-UE arrival rate (req/s)."""
+    profiles, e, c = _paper_fleet(n_alexnet, n_resnet)
+    n = len(profiles)
+    return Scenario(name=f"fixed_rate[{rate:g}]",
+                    cfg=MecConfig(lam_mode=LAM_FIXED),
+                    profiles=profiles, e_budget=e, c_budget=c,
+                    lam_fixed=(float(rate),) * n,
+                    description=f"Fig. 4 fixed-rate cell @ {rate:g} req/s")
+
+
+@register("peak_window")
+def peak_window(base_rate: float = 2.5, boost: float = 1.0, start: int = 75,
+                stop: int = 110) -> Scenario:
+    """Fig. 5 stability run: constant base rate + a peak-workload window."""
+    profiles, e, c = _paper_fleet(2, 3)
+    n = len(profiles)
+    cfg = MecConfig(lam_mode=LAM_PEAK, peak_start=int(start),
+                    peak_stop=int(stop), peak_boost=float(boost))
+    return Scenario(name=f"peak_window[{base_rate:g}+{boost:g}]",
+                    cfg=cfg, profiles=profiles, e_budget=e, c_budget=c,
+                    lam_fixed=(float(base_rate),) * n,
+                    description="Fig. 5 peak-workload cell")
+
+
+@register("hetero_fleet")
+def hetero_fleet(n_ue: int = 8, seed: int = 0,
+                 rate_range: tuple[float, float] = (0.5, 2.5)) -> Scenario:
+    """Heterogeneous fleet: random AlexNet/ResNet mix, budgets and rates."""
+    from ..profiling.convnets import alexnet_profile, resnet18_profile
+    rng = np.random.default_rng(seed)
+    pool = (alexnet_profile(), resnet18_profile())
+    picks = rng.integers(0, len(pool), n_ue)
+    profiles = tuple(pool[i] for i in picks)
+    e = tuple(float(x) for x in rng.uniform(0.030, 0.080, n_ue))
+    c = tuple(float(x) for x in rng.uniform(0.025, 0.120, n_ue))
+    lam = tuple(float(x) for x in rng.uniform(*rate_range, n_ue))
+    return Scenario(name=f"hetero_fleet[{n_ue}@{seed}]",
+                    cfg=MecConfig(lam_mode=LAM_FIXED),
+                    profiles=profiles, e_budget=e, c_budget=c,
+                    lam_fixed=lam,
+                    description="random device/budget/rate mix")
+
+
+def multicell_grid(cells: int = 16, ues: int = 8, seed: int = 0,
+                   d_min_m: float = 60.0, d_max_m: float = 300.0,
+                   rate_range: tuple[float, float] = (0.5, 2.5),
+                   uniform_scalars: bool = True) -> list[Scenario]:
+    """B independent cells for one batched grid: each cell is a heterogeneous
+    fleet at its own ES distance (per-cell mean channel gain).
+
+    ``uniform_scalars=True`` keeps every ``MecConfig`` scalar at Table I
+    values so the grid qualifies for the single-launch Pallas sweep route.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for b in range(cells):
+        cell = hetero_fleet(n_ue=ues, seed=seed * 10_007 + b,
+                            rate_range=rate_range)
+        dist = float(rng.uniform(d_min_m, d_max_m))
+        cfg = cell.cfg
+        if not uniform_scalars:
+            cfg = dataclasses.replace(cfg, v=float(rng.uniform(5.0, 20.0)))
+        out.append(dataclasses.replace(
+            cell, name=f"cell[{b}]@{dist:.0f}m", cfg=cfg,
+            mean_gain=free_space_gain(distance_m=dist),
+            description=f"grid cell {b}, ES distance {dist:.0f} m"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stacking
+# ---------------------------------------------------------------------------
+
+def _pad_cuts(p: MecParams, cmax: int) -> MecParams:
+    """Pad a cell's cut axis to ``cmax`` columns.
+
+    Per-cut tables are constant for c >= L_n (cumsum/max of zero padding), so
+    edge replication preserves semantics; raw per-layer tables get zeros
+    (there is no layer there), and psi's edge value is already 0.
+    """
+    c = p.num_cuts
+    if c == cmax:
+        return p
+    pad_edge = lambda t: jnp.pad(t, ((0, 0), (0, cmax - c)), mode="edge")
+    pad_zero = lambda t: jnp.pad(t, ((0, 0), (0, cmax - c)))
+    return dataclasses.replace(
+        p,
+        macs=pad_zero(p.macs), param_bytes=pad_zero(p.param_bytes),
+        act_bytes=pad_zero(p.act_bytes),
+        prefix_macs=pad_edge(p.prefix_macs),
+        suffix_macs=pad_edge(p.suffix_macs),
+        psi=pad_zero(p.psi),
+        prefix_params=pad_edge(p.prefix_params),
+        suffix_params=pad_edge(p.suffix_params),
+        prefix_act_max=pad_edge(p.prefix_act_max),
+        suffix_act_max=pad_edge(p.suffix_act_max))
+
+
+def stack_params(params_list: Sequence[MecParams]) -> MecParams:
+    """Stack B single-cell param pytrees into one (B, ...) pytree.
+
+    Cells must share the UE count; the cut axis is padded to the widest cell.
+    ``edge_queueing`` (a static field) must agree across cells.
+    """
+    if not params_list:
+        raise ValueError("need at least one cell")
+    n_ues = {p.n_ue for p in params_list}
+    if len(n_ues) != 1:
+        raise ValueError(f"cells must share the UE count, got {sorted(n_ues)}")
+    eq = {p.edge_queueing for p in params_list}
+    if len(eq) != 1:
+        raise ValueError("cells must share edge_queueing (static field)")
+    cmax = max(p.num_cuts for p in params_list)
+    padded = [_pad_cuts(p, cmax) for p in params_list]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+
+
+# ---------------------------------------------------------------------------
+# Batched policies (per-cell signature; the grid vmaps them over cells)
+# ---------------------------------------------------------------------------
+
+def oracle_policy(params: MecParams, state: MecState, key) -> jax.Array:
+    """Decoupled per-slot argmin over the (N, C) objective table (lax path)."""
+    del key
+    return sweep.oracle_cut_p(params, state)
+
+
+def local_policy(params: MecParams, state: MecState, key) -> jax.Array:
+    del state, key
+    return params.L
+
+
+def edge_policy(params: MecParams, state: MecState, key) -> jax.Array:
+    del state
+    return jnp.zeros((params.n_ue,), jnp.int32)
+
+
+def random_policy(params: MecParams, state: MecState, key) -> jax.Array:
+    return jax.random.randint(key, (params.n_ue,), 0, params.L + 1)
+
+
+POLICIES: dict[str, Callable] = {
+    "oracle": oracle_policy,
+    "local": local_policy,
+    "edge": edge_policy,
+    "random": random_policy,
+}
+
+
+# ---------------------------------------------------------------------------
+# Batched engine
+# ---------------------------------------------------------------------------
+
+class ScenarioGrid:
+    """B independent cells evaluated as one program.
+
+    ``params`` is the stacked (B, ...) ``MecParams`` pytree; ``reset`` /
+    ``step`` are vmapped over cells; ``make_rollout`` returns one jitted
+    ``lax.scan`` over time slots that advances every cell per iteration.
+    """
+
+    def __init__(self, scenarios: Sequence[Scenario]):
+        self.scenarios = tuple(scenarios)
+        if not self.scenarios:
+            raise ValueError("empty grid")
+        self.params = stack_params([s.params() for s in self.scenarios])
+        self.b = len(self.scenarios)
+        self.n_ue = self.scenarios[0].n_ue
+        self.num_cuts = int(self.params.num_cuts)
+        # Host-side kernel scalars, shared across cells or None.
+        per_cell = [s.sweep_scalars() for s in self.scenarios]
+        self.sweep_scalars = per_cell[0] if all(
+            s == per_cell[0] for s in per_cell) else None
+
+    # -- per-slot primitives ------------------------------------------------
+
+    def reset(self, key: jax.Array) -> MecState:
+        """Stacked (B, ...) states from one key."""
+        keys = jax.random.split(key, self.b)
+        return jax.vmap(reset_p)(self.params, keys)
+
+    def step(self, states: MecState,
+             cuts: jax.Array) -> tuple[MecState, SlotResult]:
+        """(B, N) cuts -> stacked next states + (B, N) slot results."""
+        return jax.vmap(step_p)(self.params, states, cuts)
+
+    # -- batched oracle sweep ----------------------------------------------
+
+    def objective_tables(self, states: MecState, *, backend: str = "auto",
+                         interpret: bool | None = None) -> jax.Array:
+        """(B, N, C) drift-plus-penalty tables for every cell at once.
+
+        backend:
+          * ``"pallas"`` -- one ``partition_sweep`` kernel launch over the
+            flattened (B*N, C) grid (requires uniform kernel scalars across
+            cells; ``interpret=True`` off-TPU).
+          * ``"ref"``    -- ``kernels.ref`` checked fallback (vmapped).
+          * ``"lax"``    -- vmapped ``sweep.objective_table_p``.
+          * ``"auto"``   -- pallas on TPU when eligible, else lax.
+        """
+        if backend == "auto":
+            backend = ("pallas" if self.sweep_scalars is not None
+                       and jax.default_backend() == "tpu" else "lax")
+        if backend == "lax":
+            return jax.vmap(sweep.objective_table_p)(self.params, states)
+        if self.sweep_scalars is None:
+            raise ValueError(
+                "kernel scalars differ across cells; use backend='lax'")
+        p = self.params
+        args = (p.macs, p.param_bytes, p.act_bytes, p.psi, p.L,
+                states.lam, states.gain, states.queues.energy,
+                states.queues.memory, self.sweep_scalars)
+        if backend == "ref":
+            from ..kernels.ref import partition_sweep_batched_ref
+            return partition_sweep_batched_ref(*args)
+        if backend == "pallas":
+            from ..kernels.partition_sweep import partition_sweep_batched
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            return partition_sweep_batched(*args, interpret=interpret)
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def oracle_cuts(self, states: MecState, *, backend: str = "auto",
+                    interpret: bool | None = None) -> jax.Array:
+        """Batched Oracle decision: argmin over each cell's objective table."""
+        table = self.objective_tables(states, backend=backend,
+                                      interpret=interpret)
+        return jnp.argmin(table, axis=-1).astype(jnp.int32)
+
+    # -- rollout ------------------------------------------------------------
+
+    def make_rollout(self, policy: str | Callable = "oracle",
+                     steps: int = 200, oracle_backend: str = "auto"):
+        """One jitted program: reset all cells, scan ``steps`` slots.
+
+        ``policy`` is a registry name or a per-cell callable
+        ``(params, state, key) -> (N,) cuts`` (vmapped over cells here).
+        The ``"oracle"`` policy's per-slot sweep goes through
+        ``oracle_cuts``/``objective_tables`` with ``oracle_backend`` --
+        i.e. the single-launch Pallas kernel on TPU, lax elsewhere.
+        Returns ``fn(key) -> (final_states, results, summary)`` with results
+        stacked (steps, B, N) and summary per-cell (B,) means.
+        """
+        if policy == "oracle":
+            if oracle_backend == "auto":
+                oracle_backend = ("pallas" if self.sweep_scalars is not None
+                                  and jax.default_backend() == "tpu"
+                                  else "lax")
+            act = None  # batched below; the sweep kernel wants whole-grid args
+        else:
+            act = POLICIES[policy] if isinstance(policy, str) else policy
+        params = self.params
+        b = self.b
+
+        def rollout(key):
+            key, k0 = jax.random.split(key)
+            states = self.reset(k0)
+
+            def body(carry, _):
+                sts, k = carry
+                k, k_act = jax.random.split(k)
+                if act is None:
+                    cuts = self.oracle_cuts(sts, backend=oracle_backend)
+                else:
+                    cuts = jax.vmap(act)(params, sts,
+                                         jax.random.split(k_act, b))
+                sts2, res = jax.vmap(step_p)(params, sts, cuts)
+                return (sts2, k), res
+
+            (states, _), results = jax.lax.scan(
+                body, (states, key), None, length=steps)
+            summary = {
+                "reward": jnp.mean(results.reward, axis=0),       # (B,)
+                "delay": jnp.mean(results.delay, axis=(0, 2)),
+                "energy": jnp.mean(results.energy, axis=(0, 2)),
+                "mem": jnp.mean(results.mem_cost, axis=(0, 2)),
+                "q_energy_final": jnp.mean(results.q_energy[-1], axis=-1),
+                "q_memory_final": jnp.mean(results.q_memory[-1], axis=-1),
+                "cut_mean": jnp.mean(results.cut.astype(jnp.float32),
+                                     axis=(0, 2)),
+            }
+            return states, results, summary
+
+        return jax.jit(rollout)
+
+    def rollout(self, policy: str | Callable = "oracle", steps: int = 200,
+                seed: int = 0, oracle_backend: str = "auto"):
+        """Convenience one-shot: build + run the jitted rollout."""
+        fn = self.make_rollout(policy, steps, oracle_backend=oracle_backend)
+        return fn(jax.random.PRNGKey(seed))
+
+
+def grid_from_names(specs: Sequence[str | tuple[str, dict]]) -> ScenarioGrid:
+    """Build a grid from registry names, e.g. ``[("fixed_rate", {"rate": r})
+    for r in (0.5, 1.0, 1.5, 2.0, 2.5)]`` evaluates a whole Fig. 4 sweep in
+    one program."""
+    cells = []
+    for spec in specs:
+        if isinstance(spec, str):
+            cells.append(make(spec))
+        else:
+            name, knobs = spec
+            cells.append(make(name, **knobs))
+    return ScenarioGrid(cells)

@@ -66,19 +66,32 @@ def objective_table(*, prefix_macs, suffix_macs, psi, prefix_params,
     return jnp.where(feasible, obj, _BIG)
 
 
+def objective_table_p(params, state):
+    """Params-first wrapper over a ``MecParams`` pytree (vmap-friendly:
+    ``jax.vmap(objective_table_p)`` evaluates B stacked cells at once)."""
+    return objective_table(
+        prefix_macs=params.prefix_macs, suffix_macs=params.suffix_macs,
+        psi=params.psi, prefix_params=params.prefix_params,
+        suffix_params=params.suffix_params,
+        prefix_act_max=params.prefix_act_max,
+        suffix_act_max=params.suffix_act_max,
+        L=params.L, lam=state.lam, gain=state.gain,
+        q_energy=state.queues.energy, q_memory=state.queues.memory,
+        rho=params.rho, kappa=params.kappa, p_tx=params.p_tx,
+        w_hz=params.w_hz, n0=params.n0,
+        f_max_ue=params.f_max_ue, f_max_es=params.f_max_es, v=params.v,
+        gamma_ue=params.gamma_ue, gamma_es=params.gamma_es,
+        stability_margin=params.stability_margin)
+
+
+def oracle_cut_p(params, state):
+    """Per-slot decoupled-oracle partitioning decision (params-first)."""
+    return jnp.argmin(objective_table_p(params, state), axis=1).astype(jnp.int32)
+
+
 def env_objective_table(env, state):
     """Convenience wrapper binding an ``MecEnv``'s tables and scalars."""
-    cfg = env.cfg
-    return objective_table(
-        prefix_macs=env.prefix_macs, suffix_macs=env.suffix_macs, psi=env.psi,
-        prefix_params=env.prefix_params, suffix_params=env.suffix_params,
-        prefix_act_max=env.prefix_act_max, suffix_act_max=env.suffix_act_max,
-        L=env.L, lam=state.lam, gain=state.gain,
-        q_energy=state.queues.energy, q_memory=state.queues.memory,
-        rho=cfg.rho, kappa=cfg.kappa, p_tx=cfg.p_tx, w_hz=cfg.w_hz, n0=cfg.n0,
-        f_max_ue=cfg.f_max_ue, f_max_es=cfg.f_max_es, v=cfg.v,
-        gamma_ue=cfg.gamma_ue, gamma_es=cfg.gamma_es,
-        stability_margin=cfg.stability_margin)
+    return objective_table_p(env.params, state)
 
 
 def oracle_cut(env, state):

@@ -139,10 +139,19 @@ def _kernel(macs_ref, params_ref, acts_ref, psi_ref, l_ref, lam_ref,
 
 def partition_sweep_pallas(macs, params_b, acts, psi, L, lam, gain, q_energy,
                            q_memory, scalars, *, ue_block: int = 8,
-                           interpret: bool = False):
+                           interpret: bool = False, n_total: int | None = None):
     """All args (N, C) / (N,); scalars: dict of MEC constants.
-    Returns the (N, C) objective table (infeasible cells = 1e30)."""
+    Returns the (N, C) objective table (infeasible cells = 1e30).
+
+    ``n_total`` overrides the UE count used for the even-split decoupling
+    (alpha = 1/n_total, f_es = f_max_es/n_total).  It defaults to N, but a
+    batched caller that flattens B independent cells of N UEs each into one
+    (B*N, C) problem must pass the per-cell N so the splits stay per-cell
+    (see ``partition_sweep_batched``).
+    """
     n, c = macs.shape
+    if n_total is None:
+        n_total = n
     pad = (-n) % ue_block
     if pad:
         padded = lambda t: jnp.pad(t, ((0, pad),) + ((0, 0),) * (t.ndim - 1))
@@ -153,7 +162,7 @@ def partition_sweep_pallas(macs, params_b, acts, psi, L, lam, gain, q_energy,
 
     col = lambda t: t.reshape(-1, 1).astype(jnp.float32)
     kernel = functools.partial(
-        _kernel, c=c, n_total=n,
+        _kernel, c=c, n_total=n_total,
         rho=scalars["rho"], kappa=scalars["kappa"], p_tx=scalars["p_tx"],
         w_hz=scalars["w_hz"], n0=scalars["n0"],
         f_max_ue=scalars["f_max_ue"], f_max_es=scalars["f_max_es"],
@@ -175,3 +184,23 @@ def partition_sweep_pallas(macs, params_b, acts, psi, L, lam, gain, q_energy,
       acts.astype(jnp.float32), psi.astype(jnp.float32),
       col(L), col(lam), col(gain), col(q_energy), col(q_memory))
     return out[:n]
+
+
+def partition_sweep_batched(macs, params_b, acts, psi, L, lam, gain, q_energy,
+                            q_memory, scalars, *, ue_block: int = 8,
+                            interpret: bool = False):
+    """Batched sweep over B independent cells in ONE kernel launch.
+
+    Tables are (B, N, C), vectors (B, N); scalars are shared across cells
+    (they are baked into the kernel as compile-time constants).  The B*N UE
+    rows are flattened onto the kernel's UE-block grid -- cells never
+    interact row-wise, and the even-split decoupling stays per-cell via
+    ``n_total=N``.  Returns the (B, N, C) objective table.
+    """
+    b, n, c = macs.shape
+    flat = lambda t: t.reshape((b * n,) + t.shape[2:])
+    out = partition_sweep_pallas(
+        flat(macs), flat(params_b), flat(acts), flat(psi),
+        flat(L), flat(lam), flat(gain), flat(q_energy), flat(q_memory),
+        scalars, ue_block=ue_block, interpret=interpret, n_total=n)
+    return out.reshape(b, n, c)

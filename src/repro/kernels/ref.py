@@ -267,3 +267,12 @@ def partition_sweep_ref(macs, params_b, acts, psi, L, lam, gain, q_energy,
         prefix_act_max=prefix_act_max, suffix_act_max=suffix_act_max,
         L=L, lam=lam, gain=gain, q_energy=q_energy, q_memory=q_memory,
         **scalars)
+
+
+def partition_sweep_batched_ref(macs, params_b, acts, psi, L, lam, gain,
+                                q_energy, q_memory, scalars):
+    """Checked fallback for ``partition_sweep_batched``: vmap the per-cell
+    reference over the leading cell axis (tables (B, N, C), vectors (B, N))."""
+    per_cell = lambda *args: partition_sweep_ref(*args, scalars)
+    return jax.vmap(per_cell)(macs, params_b, acts, psi, L, lam, gain,
+                              q_energy, q_memory)

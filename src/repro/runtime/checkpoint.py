@@ -80,13 +80,18 @@ class CheckpointManager:
                 self._write(*item)
             except Exception as e:  # surfaced on next wait()
                 self._err = e
+            finally:
+                self._q.task_done()
 
     def wait(self):
-        """Block until queued saves land (call before shutdown)."""
-        self._q.join() if False else None
-        while self._thread is not None and not self._q.empty():
-            time.sleep(0.01)
-        time.sleep(0.01)
+        """Block until queued saves land (call before shutdown).
+
+        ``Queue.join`` (paired with ``task_done`` in the worker) waits for
+        in-flight writes too; polling ``empty()`` raced with a write that had
+        been popped but not yet published.
+        """
+        if self._thread is not None:
+            self._q.join()
         if self._err:
             raise self._err
 

@@ -1,0 +1,119 @@
+"""Hypothesis-optional shim.
+
+When ``hypothesis`` is installed, this module re-exports the real
+``given`` / ``settings`` / ``strategies`` unchanged.  On a bare environment
+(the container that runs tier-1 verify has no hypothesis) it substitutes a
+small fixed-examples fallback: ``@given`` runs the test body over a
+deterministic set of examples per strategy -- both interval endpoints, the
+midpoint, then seeded-random draws -- so property tests still exercise the
+edge cases they were written for, just without shrinking or example search.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+
+Only the strategy surface the suite uses is implemented in the fallback:
+``st.floats(lo, hi)``, ``st.integers(lo, hi)``, ``st.lists(elem,
+min_size=, max_size=)``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+    import zlib
+
+    # Fallback runs min(max_examples, _CAP) examples; fixed examples don't
+    # shrink, so a modest cap keeps the bare-env suite fast.
+    _CAP = 20
+
+    class _Strategy:
+        def sample(self, rng: random.Random, i: int):
+            raise NotImplementedError
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def sample(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            if i == 2:
+                return 0.5 * (self.lo + self.hi)
+            return rng.uniform(self.lo, self.hi)
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def sample(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=None):
+            self.elements = elements
+            self.min_size = int(min_size)
+            self.max_size = self.min_size + 8 if max_size is None else int(max_size)
+
+        def sample(self, rng, i):
+            if i == 0:  # all-endpoint-low, shortest (e.g. all-zero demands)
+                return [self.elements.sample(rng, 0)] * self.min_size
+            if i == 1:  # all-endpoint-high, longest
+                return [self.elements.sample(rng, 1)] * self.max_size
+            size = rng.randint(self.min_size, self.max_size)
+            return [self.elements.sample(rng, 3) for _ in range(size)]
+
+    class _StModule:
+        floats = staticmethod(_Floats)
+        integers = staticmethod(_Integers)
+        lists = staticmethod(_Lists)
+
+    st = _StModule()
+
+    def settings(**kw):
+        """Records max_examples for the fallback; everything else ignored."""
+        def deco(fn):
+            fn._compat_settings = dict(kw)
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            # hypothesis maps positional strategies to the RIGHTMOST params
+            strat_map = dict(zip(names[len(names) - len(arg_strats):],
+                                 arg_strats))
+            strat_map.update(kw_strats)
+            remaining = [p for p in sig.parameters.values()
+                         if p.name not in strat_map]
+            n = min(getattr(fn, "_compat_settings", {}).get(
+                "max_examples", _CAP), _CAP)
+            seed = zlib.crc32(fn.__qualname__.encode())
+
+            def wrapper(*args, **kwargs):
+                rng = random.Random(seed)
+                for i in range(n):
+                    drawn = {k: s.sample(rng, i)
+                             for k, s in strat_map.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # hide strategy-filled params so pytest doesn't treat them as
+            # fixtures; keep real fixtures visible
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+        return deco

@@ -13,6 +13,8 @@ from repro.data.pipeline import for_arch
 from repro.models import transformer
 from repro.models.steps import make_train_step
 
+pytestmark = pytest.mark.slow  # end-to-end; deselected in tier-1
+
 ARCHS = sorted(load_all().keys())
 
 

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import convex
 
@@ -11,6 +11,7 @@ from repro.core import convex
 # P3: Fibonacci search vs dense grid
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @given(q=st.floats(0.0, 500.0), d=st.floats(1e7, 4e8), lam=st.floats(0.2, 2.5))
 @settings(max_examples=40, deadline=None)
 def test_p3_beats_dense_grid(q, d, lam):
@@ -28,6 +29,20 @@ def test_p3_beats_dense_grid(q, d, lam):
     # Fibonacci optimum must be at least as good as a 20k-point grid (small
     # tolerance for float32 evaluation noise).
     assert j_star <= j_grid * (1 + 2e-3) + 1e-6, (f_star, best)
+
+
+def test_p3_beats_coarse_grid_fast():
+    """Tier-1 guard on P3 optimality (the dense sweep is slow-marked)."""
+    kappa, v, f_max = 1e-28, 10.0, 1.5e9
+    for q, d, lam in [(0.0, 2e8, 2.0), (250.0, 1e8, 1.0), (500.0, 4e8, 0.5)]:
+        f_star = float(convex.solve_p3(jnp.float32(q), kappa, jnp.float32(d),
+                                       jnp.float32(lam), v, f_max))
+        grid = np.linspace(d * lam * 1.001 + 1.0, f_max, 2_000)
+        j_grid = float(np.min(np.array(convex.p3_objective(
+            jnp.asarray(grid, jnp.float32), q, kappa, d, lam, v))))
+        j_star = float(convex.p3_objective(jnp.float32(f_star), q, kappa, d,
+                                           lam, v))
+        assert j_star <= j_grid * (1 + 2e-3) + 1e-6
 
 
 def test_p3_zero_demand_gives_zero():
@@ -96,6 +111,7 @@ def _p5_inputs(n, seed=0):
             jnp.asarray(gain, jnp.float32), 10 ** (-17.4) / 1000.0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_p5_beats_brute_force_n2(seed):
     q, p, lam, v, psi, w, gain, n0 = _p5_inputs(2, seed)
@@ -103,6 +119,22 @@ def test_p5_beats_brute_force_n2(seed):
     assert alpha.sum() == pytest.approx(1.0, abs=1e-4)
     best = np.inf
     for a0 in np.linspace(1e-4, 1 - 1e-4, 4001):
+        val = float(convex.p5_objective(jnp.asarray([a0, 1 - a0], jnp.float32),
+                                        q, p, lam, v, psi, w, gain, n0))
+        best = min(best, val)
+    ours = float(convex.p5_objective(jnp.asarray(alpha, jnp.float32),
+                                     q, p, lam, v, psi, w, gain, n0))
+    assert ours <= best * (1 + 1e-3)
+
+
+def test_p5_beats_brute_force_fast():
+    """Tier-1 guard on P5 optimality (the 4001-point sweeps are slow-marked):
+    a coarse n=2 line search must not beat the KKT bisection."""
+    q, p, lam, v, psi, w, gain, n0 = _p5_inputs(2, seed=0)
+    alpha = np.array(convex.solve_p5(q, p, lam, v, psi, w, gain, n0))
+    assert alpha.sum() == pytest.approx(1.0, abs=1e-4)
+    best = np.inf
+    for a0 in np.linspace(1e-3, 1 - 1e-3, 401):
         val = float(convex.p5_objective(jnp.asarray([a0, 1 - a0], jnp.float32),
                                         q, p, lam, v, psi, w, gain, n0))
         best = min(best, val)

@@ -28,7 +28,9 @@ def _tol(dtype):
                                          ("full", 0)])
 @pytest.mark.parametrize("b,s,h,kv,hd", [(2, 256, 8, 4, 64), (1, 128, 4, 1, 128),
                                          (2, 192, 6, 2, 64)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 def test_flash_attention(kind, window, b, s, h, kv, hd, dtype):
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
@@ -41,6 +43,7 @@ def test_flash_attention(kind, window, b, s, h, kv, hd, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.slow
 def test_flash_attention_block_shape_sweep():
     b, s, h, kv, hd = 1, 256, 4, 2, 64
     ks = jax.random.split(KEY, 3)
@@ -77,7 +80,9 @@ def test_blocked_reference_matches_dense():
 
 @pytest.mark.parametrize("b,s,h,kv,hd", [(2, 256, 8, 4, 64), (1, 512, 4, 1, 128),
                                          (3, 128, 2, 2, 64)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 def test_decode_attention(b, s, h, kv, hd, dtype):
     ks = jax.random.split(KEY, 4)
     q = jax.random.normal(ks[0], (b, 1, h, hd), dtype)
@@ -102,6 +107,7 @@ def test_decode_attention(b, s, h, kv, hd, dtype):
     (1, 128, 2, 32, 1, 16, 32),
     (2, 96, 3, 16, 3, 8, 24),
 ])
+@pytest.mark.slow
 def test_ssd_scan(b, s, h, p, g, n, chunk):
     ks = jax.random.split(KEY, 4)
     x = jax.random.normal(ks[0], (b, s, h, p))
@@ -149,6 +155,7 @@ def test_ssd_decode_step_consistency():
 
 @pytest.mark.parametrize("b,s,r,chunk", [(2, 128, 64, 32), (1, 64, 128, 64),
                                          (3, 256, 32, 128)])
+@pytest.mark.slow
 def test_rglru_scan(b, s, r, chunk):
     ks = jax.random.split(KEY, 2)
     x = jax.random.normal(ks[0], (b, s, r)) * 0.3
@@ -195,6 +202,7 @@ def _sweep_args(seed=3, q_off=5.0):
             st.queues.memory + q_off), scalars
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed,q_off", [(3, 5.0), (7, 0.0), (11, 120.0)])
 def test_partition_sweep(seed, q_off):
     args, scalars = _sweep_args(seed, q_off)

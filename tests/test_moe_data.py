@@ -24,6 +24,7 @@ def moe_setup():
     return cfg, params
 
 
+@pytest.mark.slow
 def test_moe_no_drop_matches_dense_mixture(moe_setup):
     """With no-drop capacity, the GShard dispatch must equal the explicit
     per-token mixture of its top-k experts."""
@@ -57,6 +58,7 @@ def test_moe_no_drop_matches_dense_mixture(moe_setup):
     assert float(aux) > 0
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_tokens():
     """Tight capacity must drop overflow tokens (output != no-drop output)."""
     base = reduced(get_config("llama4-maverick-400b-a17b"))
@@ -69,6 +71,7 @@ def test_moe_capacity_drops_tokens():
     assert float(jnp.max(jnp.abs(y_tight - y_loose))) > 1e-4
 
 
+@pytest.mark.slow
 def test_moe_aux_loss_prefers_balance(moe_setup):
     """Uniform routing yields the minimal load-balance loss (= 1)."""
     cfg, p = moe_setup
@@ -119,6 +122,7 @@ def test_stream_modality_stubs():
 # roofline estimators
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_param_count_matches_model_zoo():
     """Analytic param counts == actual init() counts on reduced configs."""
     from repro.models import transformer

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.env import paper_env
 from repro.core.policies import (CategoricalPolicy, GaussianTanhPolicy,
@@ -71,6 +71,7 @@ def _fake_traj(agent, n=64, seed=0):
                       value=vals, last_value=jnp.zeros(()))
 
 
+@pytest.mark.slow
 def test_ppo_update_improves_surrogate(env):
     pol = GaussianTanhPolicy(env.obs_dim, env.L)
     agent = PPO(pol, env.obs_dim, PPOConfig(epochs=4))
@@ -111,6 +112,7 @@ def test_gae_paper_estimator_limit(env):
     np.testing.assert_allclose(np.asarray(adv), g - 0.5, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_lyapunov_v_tradeoff():
     """O(1/V) delay vs O(V) queues under the Oracle (benchmarks/ablation_v)."""
     from benchmarks.ablation_v import sweep

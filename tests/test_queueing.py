@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import queueing
 
@@ -73,3 +73,58 @@ def test_gd1_correction_exceeds_deterministic():
     base = float(queueing.es_sojourn(f_es, d_es))
     corrected = float(queueing.es_sojourn_gd1(lam, f_es, d_es, rho_ue=0.5))
     assert corrected >= base
+
+
+# ---------------------------------------------------------------------------
+# Stability edge cases (property tests via the hypothesis-compat shim):
+# lam -> mu, cut == 0, alpha -> 0 must stay finite with non-negative delays.
+# ---------------------------------------------------------------------------
+
+@given(mu=st.floats(0.5, 10.0), eps=st.floats(1e-9, 1e-3))
+@settings(max_examples=30, deadline=None)
+def test_md1_near_critical_stays_finite(mu, eps):
+    lam = mu * (1.0 - eps)  # approach the stability boundary from below
+    t = float(queueing.md1_sojourn(lam, mu))
+    assert np.isfinite(t)
+    assert t >= 1.0 / mu - 1e-6  # never below the pure service time
+
+
+@given(lam=st.floats(0.1, 3.0), d=st.floats(1e6, 5e8), slack=st.floats(1e-6, 1e-2))
+@settings(max_examples=30, deadline=None)
+def test_ue_sojourn_near_critical_stays_finite(lam, d, slack):
+    f = d * lam * (1.0 + slack)  # mu = f/d -> lam as slack -> 0
+    t = float(queueing.ue_sojourn(lam, f, d))
+    assert np.isfinite(t) and t >= 0.0
+
+
+@given(lam=st.floats(0.1, 3.0), f=st.floats(1e8, 3e9), psi=st.floats(0.0, 5e6))
+@settings(max_examples=30, deadline=None)
+def test_cut_zero_full_offload_delay(lam, f, psi):
+    """cut == 0: no local portion -> zero local delay, full e2e still finite."""
+    delay, (t_ue, t_tx, t_es) = queueing.e2e_delay(
+        lam, 0.0, 15e9, 0.0, 1e9 * 0.12, psi, 0.2, 5e6, 0.1, 1.6e-11, 4e-21)
+    assert float(t_ue) == 0.0
+    assert np.isfinite(float(delay)) and float(delay) >= 0.0
+    assert float(t_tx) >= 0.0 and float(t_es) >= 0.0
+
+
+@given(alpha=st.floats(0.0, 1e-6), psi=st.floats(1.0, 5e6))
+@settings(max_examples=30, deadline=None)
+def test_alpha_to_zero_stays_finite(alpha, psi):
+    """alpha -> 0: rate -> 0 smoothly; delay blows up but never to inf/nan."""
+    rate = float(queueing.shannon_rate(alpha, 5e6, 0.1, 1.6e-11, 4e-21))
+    assert np.isfinite(rate) and rate >= 0.0
+    t = float(queueing.trans_delay(psi, alpha, 5e6, 0.1, 1.6e-11, 4e-21))
+    assert np.isfinite(t) and t >= 0.0
+    if alpha == 0.0:
+        assert rate == 0.0
+
+
+@given(lam=st.floats(0.1, 3.0), rho_ue=st.floats(0.0, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_gd1_near_saturation_stays_finite(lam, rho_ue):
+    """G/D/1 correction at edge utilizations up to (clipped) saturation."""
+    d_es = 1e9
+    f_es = d_es * lam * 1.0001  # rho_es -> 1
+    t = float(queueing.es_sojourn_gd1(lam, f_es, d_es, rho_ue))
+    assert np.isfinite(t) and t >= 0.0

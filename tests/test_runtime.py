@@ -172,6 +172,7 @@ print("error-feedback ok", bias)
 """
 
 
+@pytest.mark.slow
 def test_compressed_grad_sync_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

@@ -1,0 +1,183 @@
+"""Scenario registry + batched multi-cell engine (repro.core.scenarios)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scenarios as sc
+from repro.core import sweep
+from repro.core.env import LAM_FIXED, MecConfig, step_p
+from repro.core.lymdo import run_fixed_batched
+
+_BIG = 1e29  # anything above this is an infeasible-cell sentinel
+
+# shared across tests so each (params, state, cut) shape compiles once
+_STEP = jax.jit(step_p)
+
+
+def _cell(tree, b):
+    return jax.tree.map(lambda x: x[b], tree)
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_names_and_make():
+    have = sc.names()
+    for name in ("paper_table1", "fixed_rate", "peak_window", "hetero_fleet"):
+        assert name in have
+    s = sc.make("fixed_rate", rate=1.5)
+    assert s.cfg.lam_mode == LAM_FIXED
+    assert np.allclose(s.lam_fixed, 1.5)
+    env = s.build()
+    st = env.reset(jax.random.PRNGKey(0))
+    _, res = env.step(st, jnp.zeros((s.n_ue,), jnp.int32))
+    assert np.isfinite(float(res.reward))
+
+
+def test_registry_matches_paper_env():
+    """paper_table1 must reproduce paper_env()'s tables and constants."""
+    from repro.core.env import paper_env
+    p_reg = sc.make("paper_table1").params()
+    p_env = paper_env().params
+    for leaf_a, leaf_b in zip(jax.tree.leaves(p_reg), jax.tree.leaves(p_env)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+def test_registry_unknown_and_duplicate():
+    with pytest.raises(KeyError):
+        sc.make("no_such_scenario")
+    with pytest.raises(ValueError):
+        @sc.register("paper_table1")
+        def clash():  # pragma: no cover
+            pass
+
+
+def test_hetero_fleet_deterministic_in_seed():
+    a = sc.make("hetero_fleet", n_ue=6, seed=3)
+    b = sc.make("hetero_fleet", n_ue=6, seed=3)
+    c = sc.make("hetero_fleet", n_ue=6, seed=4)
+    assert a.e_budget == b.e_budget and a.lam_fixed == b.lam_fixed
+    assert a.e_budget != c.e_budget or a.lam_fixed != c.lam_fixed
+
+
+# ---------------------------------------------------------------------------
+# Stacking
+# ---------------------------------------------------------------------------
+
+def test_stack_params_requires_common_n():
+    p4 = sc.make("hetero_fleet", n_ue=4).params()
+    p5 = sc.make("hetero_fleet", n_ue=5).params()
+    with pytest.raises(ValueError):
+        sc.stack_params([p4, p5])
+
+
+def test_stack_params_pads_cut_axis():
+    """Cells with different layer counts stack via edge-padding; padded cuts
+    stay infeasible so they never win the argmin."""
+    from repro.profiling.convnets import alexnet_profile, resnet18_profile
+    alex = sc.Scenario(name="alex", cfg=MecConfig(lam_mode=LAM_FIXED),
+                       profiles=(alexnet_profile(),) * 3,
+                       e_budget=(0.04,) * 3, c_budget=(0.1,) * 3)
+    res = sc.Scenario(name="res", cfg=MecConfig(lam_mode=LAM_FIXED),
+                      profiles=(resnet18_profile(),) * 3,
+                      e_budget=(0.06,) * 3, c_budget=(0.03,) * 3)
+    pa, pr = alex.params(), res.params()
+    assert pa.num_cuts != pr.num_cuts  # the padding path is exercised
+    stacked = sc.stack_params([pa, pr])
+    assert stacked.num_cuts == max(pa.num_cuts, pr.num_cuts)
+
+    grid = sc.ScenarioGrid([alex, res])
+    states = grid.reset(jax.random.PRNGKey(0))
+    table = np.asarray(grid.objective_tables(states, backend="lax"))
+    # every cut beyond a cell's L is infeasible
+    L = np.asarray(stacked.L)
+    cols = np.arange(stacked.num_cuts)[None, None, :]
+    assert np.all(table[cols > L[:, :, None]] > _BIG)
+    # narrow cell's step == its own unpadded step (padding is semantics-free)
+    st_a = _cell(states, 0)
+    cuts = jnp.full((3,), 5, jnp.int32)
+    _, res_pad = _STEP(_cell(grid.params, 0), st_a, cuts)
+    _, res_raw = _STEP(pa, st_a, cuts)
+    np.testing.assert_allclose(np.asarray(res_pad.reward),
+                               np.asarray(res_raw.reward), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched-vs-looped equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def grid():
+    return sc.ScenarioGrid(sc.multicell_grid(cells=4, ues=4, seed=7))
+
+
+@pytest.fixture(scope="module")
+def states(grid):
+    return grid.reset(jax.random.PRNGKey(42))
+
+
+def test_batched_step_equals_per_cell_loop(grid, states):
+    """vmap-over-cells step == per-cell loop to 1e-5 (results AND next state)."""
+    key = jax.random.PRNGKey(9)
+    cuts = jax.random.randint(key, (grid.b, grid.n_ue), 0, grid.num_cuts)
+    nxt_b, res_b = jax.jit(grid.step)(states, cuts)
+    for b in range(grid.b):
+        nxt_1, res_1 = _STEP(_cell(grid.params, b), _cell(states, b), cuts[b])
+        for a, ref in zip(jax.tree.leaves(res_b), jax.tree.leaves(res_1)):
+            np.testing.assert_allclose(np.asarray(a)[b], np.asarray(ref),
+                                       rtol=1e-5, atol=1e-7)
+        for a, ref in zip(jax.tree.leaves(nxt_b), jax.tree.leaves(nxt_1)):
+            np.testing.assert_allclose(np.asarray(a)[b], np.asarray(ref),
+                                       rtol=1e-5, atol=1e-7)
+
+
+def test_batched_oracle_equals_per_cell_oracle(grid, states):
+    cuts_b = np.asarray(grid.oracle_cuts(states, backend="lax"))
+    oracle_1 = jax.jit(sweep.oracle_cut_p)
+    for b in range(grid.b):
+        cut_1 = np.asarray(oracle_1(_cell(grid.params, b), _cell(states, b)))
+        np.testing.assert_array_equal(cuts_b[b], cut_1)
+
+
+def test_batched_rollout_runs_and_summarizes(grid):
+    metrics, results = run_fixed_batched(grid, "oracle", episodes=1, steps=5)
+    assert results.reward.shape == (5, grid.b)
+    assert results.delay.shape == (5, grid.b, grid.n_ue)
+    for name in ("reward", "delay", "energy", "q_energy_final"):
+        assert metrics[name].shape == (grid.b,)
+        assert np.all(np.isfinite(metrics[name]))
+    assert np.all(metrics["delay"] > 0)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs reference on a scenario-grid batch
+# ---------------------------------------------------------------------------
+
+def test_partition_sweep_pallas_matches_ref_on_grid(grid, states):
+    tab_ref = np.asarray(grid.objective_tables(states, backend="ref"))
+    tab_pal = np.asarray(
+        grid.objective_tables(states, backend="pallas", interpret=True))
+    tab_lax = np.asarray(grid.objective_tables(states, backend="lax"))
+    # the ref backend IS the lax semantics, batched
+    np.testing.assert_allclose(tab_ref, tab_lax, rtol=1e-6)
+    feas = tab_ref < _BIG
+    assert feas.any()
+    np.testing.assert_allclose(tab_pal[feas], tab_ref[feas], rtol=2e-4)
+    # infeasible cells agree exactly on the sentinel
+    assert np.all(tab_pal[~feas] > _BIG)
+    # and the argmin decisions (the Oracle) agree everywhere
+    np.testing.assert_array_equal(tab_pal.argmin(-1), tab_ref.argmin(-1))
+
+
+def test_objective_tables_mixed_scalars_rejects_kernel_route():
+    cells = sc.multicell_grid(cells=2, ues=3, seed=0, uniform_scalars=False)
+    g = sc.ScenarioGrid(cells)
+    assert g.sweep_scalars is None
+    states = g.reset(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        g.objective_tables(states, backend="pallas", interpret=True)
+    # but the lax route handles per-cell scalars fine
+    table = g.objective_tables(states, backend="lax")
+    assert np.isfinite(np.asarray(table)).all()

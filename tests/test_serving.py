@@ -18,6 +18,7 @@ def setup():
     return cfg, params
 
 
+@pytest.mark.slow
 def test_partitioned_equals_monolithic_all_cuts(setup):
     """UE half + ES half == full model, at EVERY unit cut (the paper's
     correctness requirement: partitioning must not change the function)."""
@@ -71,6 +72,7 @@ def test_engine_serves_all_requests(setup):
     assert all(len(r.out) == 5 for r in reqs)
 
 
+@pytest.mark.slow
 def test_engine_greedy_matches_manual_decode(setup):
     """Engine tokens == hand-rolled prefill+argmax decode for one request."""
     cfg, params = setup
