@@ -1,0 +1,180 @@
+"""Device-sharded ScenarioGrid support: mesh placement over the cell axis.
+
+A :class:`~repro.core.scenarios.ScenarioGrid` stacks B cells into one
+``(B, ...)`` pytree and evaluates them with one vmap+scan program.  This
+module spreads that program across a device mesh's ``"cells"`` axis
+(built by :func:`repro.launch.mesh.make_cells_mesh`):
+
+* :func:`plan` rounds B up to a multiple of the mesh's cell-shard count and
+  records the split in a :class:`GridSharding`;
+* :func:`pad_cells` edge-replicates the last real cell into the padded slots
+  (their math stays finite -- no NaNs leak into reductions -- and
+  :meth:`GridSharding.mask` marks them invalid so rollout summaries drop
+  them);
+* :func:`place` / :func:`constrain` put the padded pytree on the mesh with
+  ``NamedSharding(P("cells", ...))`` -- under ``jit``, GSPMD then partitions
+  the whole vmapped rollout over devices with no per-cell Python dispatch;
+* :func:`cell_keys` derives per-cell PRNG keys from the cell *index* (not the
+  batch width), so cell i draws identical randomness whether the grid runs
+  padded on 8 devices or unpadded on one -- the invariant behind the
+  sharded==unsharded parity tests (tests/test_gridshard.py).
+
+Everything here is layout logic only; the per-cell physics stays the pure
+``step_p`` / ``reset_p`` of :mod:`repro.core.env`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+CELL_AXIS = "cells"
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSharding:
+    """Placement plan for one stacked (B, ...) grid over a device mesh.
+
+    ``b`` logical cells are padded to ``b_padded`` (a multiple of the mesh's
+    ``axis`` size) so every device holds the same number of cells.
+    """
+
+    mesh: Mesh
+    b: int
+    b_padded: int
+    axis: str = CELL_AXIS
+
+    def __post_init__(self):
+        if self.b_padded < self.b:
+            raise ValueError(f"b_padded={self.b_padded} < b={self.b}")
+        if self.b_padded % self.n_shards:
+            raise ValueError(
+                f"b_padded={self.b_padded} not a multiple of the "
+                f"{self.n_shards}-way {self.axis!r} axis")
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def pad(self) -> int:
+        """Number of padded (invalid) trailing cells."""
+        return self.b_padded - self.b
+
+    def mask(self) -> jax.Array:
+        """(b_padded,) validity mask: True for real cells, False for padding.
+
+        Any reduction that crosses the cell axis (or reports per-cell values
+        of a padded rollout) must apply this before trusting the numbers.
+        """
+        return jnp.arange(self.b_padded) < self.b
+
+    def spec(self, ndim: int, lead: int = 0) -> P:
+        """PartitionSpec sharding dim ``lead`` over the cells axis.
+
+        Leaves too small to carry a cell axis (0-d scalars riding in a
+        pytree) replicate instead of indexing past their rank.
+        """
+        if ndim <= lead:
+            return P()
+        entries: list = [None] * ndim
+        entries[lead] = self.axis
+        return P(*entries)
+
+    def sharding(self, ndim: int, lead: int = 0) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(ndim, lead))
+
+
+def plan(b: int, mesh: Mesh, *, axis: str = CELL_AXIS,
+         pad_to: int | None = None) -> GridSharding:
+    """Round ``b`` up to a device multiple and return the placement plan.
+
+    ``pad_to`` forces a larger padded width (it must itself be a device
+    multiple) -- used by tests to exercise the padding path on any device
+    count, and available for aligning two grids to one layout.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh has no {axis!r} axis; axes are {mesh.axis_names}")
+    if b < 1:
+        raise ValueError("need at least one cell")
+    n = int(mesh.shape[axis])
+    b_padded = -(-b // n) * n
+    if pad_to is not None:
+        if pad_to < b_padded or pad_to % n:
+            raise ValueError(
+                f"pad_to={pad_to} must be a multiple of {n} and >= {b_padded}")
+        b_padded = pad_to
+    return GridSharding(mesh=mesh, b=b, b_padded=b_padded, axis=axis)
+
+
+def pad_cells(tree, gs: GridSharding, *, lead: int = 0):
+    """Pad every leaf's cell axis from b to b_padded by edge replication.
+
+    Padded cells are copies of the last real cell: every downstream op stays
+    finite (unlike zero padding, which would divide by zero in the queueing
+    math), and ``gs.mask()`` keeps them out of reported results.
+    """
+    if gs.pad == 0:
+        return tree
+
+    def pad_leaf(x):
+        if x.ndim <= lead:           # scalar rider: no cell axis to pad
+            return x
+        pads = [(0, 0)] * x.ndim
+        pads[lead] = (0, gs.pad)
+        return jnp.pad(x, pads, mode="edge")
+
+    return jax.tree.map(pad_leaf, tree)
+
+
+def place(tree, gs: GridSharding, *, lead: int = 0):
+    """``device_put`` every leaf with the cells-axis NamedSharding.
+
+    Leaves must already be padded to ``gs.b_padded`` on axis ``lead``.
+    """
+    return jax.tree.map(
+        lambda x: jax.device_put(x, gs.sharding(x.ndim, lead)), tree)
+
+
+def constrain(tree, gs: GridSharding, *, lead: int = 0):
+    """In-jit ``with_sharding_constraint`` pinning the cell axis.
+
+    Applied to the rollout's state carry so GSPMD keeps the scan partitioned
+    over cells instead of gathering between slots.
+    """
+    def f(x):
+        return jax.lax.with_sharding_constraint(x, gs.sharding(x.ndim, lead))
+
+    return jax.tree.map(f, tree)
+
+
+def unpad(tree, gs: GridSharding, *, lead: int = 0):
+    """Slice the cell axis back to the logical b (inverse of pad_cells)."""
+    if gs.pad == 0:
+        return tree
+
+    def f(x):
+        if x.ndim <= lead:           # scalar rider: nothing was padded
+            return x
+        idx = [slice(None)] * x.ndim
+        idx[lead] = slice(0, gs.b)
+        return x[tuple(idx)]
+
+    return jax.tree.map(f, tree)
+
+
+def cell_keys(key: jax.Array, b: int, b_padded: int | None = None):
+    """Per-cell PRNG keys: ``fold_in(key, cell_index)``, padded slots clamped.
+
+    Cell i's key depends only on (key, i) -- never on the batch width -- so a
+    padded b_padded-wide grid hands cells 0..b-1 exactly the keys an unpadded
+    b-wide grid hands them.  That makes sharded and unsharded rollouts draw
+    identical randomness per real cell (the 1e-5 parity contract).  Padded
+    slots reuse the last real cell's key; their outputs are masked away.
+    """
+    n = b if b_padded is None else b_padded
+    idx = jnp.minimum(jnp.arange(n), b - 1)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)

@@ -217,6 +217,11 @@ def run_fixed_batched(grid, policy="oracle", episodes: int = 1,
     ``(params, state, key) -> (N,) cuts``.  Returns (metrics, last_results):
     metrics maps each summary name to a (B,) per-cell mean over episodes;
     last_results is the final episode's (steps, B, N) SlotResult stack.
+
+    A device-sharded grid (``grid.use_mesh(...)``; see repro.core.gridshard)
+    is accepted transparently: the rollout runs partitioned over the mesh's
+    "cells" axis and still returns logical-B outputs that match the
+    single-device run to 1e-5.
     """
     rollout = grid.make_rollout(policy, steps)
     key = jax.random.PRNGKey(seed)
@@ -235,7 +240,8 @@ def eval_policy_batched(grid, agent: PPO, train_state: TrainState,
     """Deterministic-policy LyMDO evaluation across every cell of a grid.
 
     The single trained agent (shared weights) acts per cell on that cell's
-    observation; all cells advance in one scan.  Cells must share the
+    observation; all cells advance in one scan (device-sharded grids work
+    transparently, as in :func:`run_fixed_batched`).  Cells must share the
     agent's obs/action dims (guaranteed by ScenarioGrid's common UE count)
     AND the per-UE layer counts the policy head was built with: ``to_cut``
     maps actions onto the policy's own L, so a grid cell with deeper

@@ -19,6 +19,14 @@ The batched Oracle's hot inner loop (the (B, N, C) objective table) routes
 through the ``partition_sweep`` Pallas kernel on TPU (one launch for all
 cells, ``n_total`` pinned to the per-cell UE count) and falls back to the
 checked ``kernels.ref`` / pure-lax path elsewhere.
+
+3. **A device-sharded grid** -- ``ScenarioGrid.use_mesh`` places the stacked
+   (B, ...) pytree over a ``("cells",)`` device mesh
+   (``repro.launch.mesh.make_cells_mesh``) with ``NamedSharding``; uneven B
+   is padded to a device multiple with a validity mask
+   (``repro.core.gridshard``).  The jitted rollout is unchanged -- GSPMD
+   partitions the vmap+scan over devices -- and sharded rollouts match
+   single-device ones to 1e-5 (padded cells never pollute summaries).
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..profiling.profiles import LayerProfile
-from . import sweep
+from . import gridshard, sweep
 from .env import (LAM_FIXED, LAM_IID_UNIFORM, LAM_PEAK, MecConfig, MecEnv,
                   MecParams, MecState, SlotResult, free_space_gain,
                   make_params, reset_p, step_p)
@@ -303,9 +311,16 @@ class ScenarioGrid:
     ``params`` is the stacked (B, ...) ``MecParams`` pytree; ``reset`` /
     ``step`` are vmapped over cells; ``make_rollout`` returns one jitted
     ``lax.scan`` over time slots that advances every cell per iteration.
+
+    ``use_mesh`` (or the ``mesh=`` constructor arg) additionally shards the
+    grid over a device mesh's ``"cells"`` axis: params are padded to a device
+    multiple and placed with ``NamedSharding``, and the same rollout program
+    then runs partitioned across devices.  ``params`` always stays the
+    logical unpadded stack; the padded/placed copy lives in ``_run_params``
+    and is selected automatically from a state batch's width.
     """
 
-    def __init__(self, scenarios: Sequence[Scenario]):
+    def __init__(self, scenarios: Sequence[Scenario], mesh=None):
         self.scenarios = tuple(scenarios)
         if not self.scenarios:
             raise ValueError("empty grid")
@@ -317,18 +332,66 @@ class ScenarioGrid:
         per_cell = [s.sweep_scalars() for s in self.scenarios]
         self.sweep_scalars = per_cell[0] if all(
             s == per_cell[0] for s in per_cell) else None
+        self.gridshard: gridshard.GridSharding | None = None
+        self._run_params = self.params
+        if mesh is not None:
+            self.use_mesh(mesh)
+
+    # -- device sharding ----------------------------------------------------
+
+    @property
+    def b_run(self) -> int:
+        """Cell-axis width the jitted programs run at (b, or b padded to a
+        device multiple when sharded)."""
+        return self.b if self.gridshard is None else self.gridshard.b_padded
+
+    def use_mesh(self, mesh=None, *, pad_to: int | None = None):
+        """Shard the stacked grid over ``mesh``'s ``"cells"`` axis.
+
+        ``mesh=None`` builds a 1-D mesh over every live device
+        (``repro.launch.mesh.make_cells_mesh``).  B is padded up to a
+        multiple of the cell-shard count (``pad_to`` forces a wider pad --
+        mainly for tests); padded cells replicate the last real cell and are
+        masked out of every rollout summary.  Returns ``self``.
+        """
+        if mesh is None:
+            from ..launch.mesh import make_cells_mesh
+            mesh = make_cells_mesh()
+        gs = gridshard.plan(self.b, mesh, pad_to=pad_to)
+        padded = gridshard.pad_cells(self.params, gs)
+        self._run_params = gridshard.place(padded, gs)
+        self.gridshard = gs
+        return self
+
+    def _params_for(self, states: MecState) -> MecParams:
+        """Pick the params stack matching a state batch's cell-axis width."""
+        lead = states.t.shape[0]
+        if lead == self.b_run:
+            return self._run_params
+        if lead == self.b:
+            return self.params
+        raise ValueError(
+            f"state batch {lead} matches neither b={self.b} nor the padded "
+            f"width {self.b_run}")
 
     # -- per-slot primitives ------------------------------------------------
 
     def reset(self, key: jax.Array) -> MecState:
-        """Stacked (B, ...) states from one key."""
-        keys = jax.random.split(key, self.b)
-        return jax.vmap(reset_p)(self.params, keys)
+        """Stacked (b_run, ...) states from one key.
+
+        Per-cell keys come from ``gridshard.cell_keys`` (fold_in over the
+        cell index), so cell i draws the same randomness at any padding.
+        """
+        keys = gridshard.cell_keys(key, self.b, self.b_run)
+        states = jax.vmap(reset_p)(self._run_params, keys)
+        if self.gridshard is not None:
+            states = gridshard.constrain(states, self.gridshard)
+        return states
 
     def step(self, states: MecState,
              cuts: jax.Array) -> tuple[MecState, SlotResult]:
         """(B, N) cuts -> stacked next states + (B, N) slot results."""
-        return jax.vmap(step_p)(self.params, states, cuts)
+        return jax.vmap(step_p)(self._params_for(states), states, cuts)
 
     # -- batched oracle sweep ----------------------------------------------
 
@@ -344,15 +407,15 @@ class ScenarioGrid:
           * ``"lax"``    -- vmapped ``sweep.objective_table_p``.
           * ``"auto"``   -- pallas on TPU when eligible, else lax.
         """
+        p = self._params_for(states)
         if backend == "auto":
             backend = ("pallas" if self.sweep_scalars is not None
                        and jax.default_backend() == "tpu" else "lax")
         if backend == "lax":
-            return jax.vmap(sweep.objective_table_p)(self.params, states)
+            return jax.vmap(sweep.objective_table_p)(p, states)
         if self.sweep_scalars is None:
             raise ValueError(
                 "kernel scalars differ across cells; use backend='lax'")
-        p = self.params
         args = (p.macs, p.param_bytes, p.act_bytes, p.psi, p.L,
                 states.lam, states.gain, states.queues.energy,
                 states.queues.memory, self.sweep_scalars)
@@ -386,6 +449,11 @@ class ScenarioGrid:
         i.e. the single-launch Pallas kernel on TPU, lax elsewhere.
         Returns ``fn(key) -> (final_states, results, summary)`` with results
         stacked (steps, B, N) and summary per-cell (B,) means.
+
+        On a sharded grid the identical program runs at the padded width
+        with GSPMD partitioning the cell axis; padded cells are masked out
+        of the summary and sliced off results/states before returning, so
+        callers always see the logical B.
         """
         if policy == "oracle":
             if oracle_backend == "auto":
@@ -395,8 +463,8 @@ class ScenarioGrid:
             act = None  # batched below; the sweep kernel wants whole-grid args
         else:
             act = POLICIES[policy] if isinstance(policy, str) else policy
-        params = self.params
-        b = self.b
+        params = self._run_params
+        b, b_run, gs = self.b, self.b_run, self.gridshard
 
         def rollout(key):
             key, k0 = jax.random.split(key)
@@ -409,8 +477,10 @@ class ScenarioGrid:
                     cuts = self.oracle_cuts(sts, backend=oracle_backend)
                 else:
                     cuts = jax.vmap(act)(params, sts,
-                                         jax.random.split(k_act, b))
+                                         gridshard.cell_keys(k_act, b, b_run))
                 sts2, res = jax.vmap(step_p)(params, sts, cuts)
+                if gs is not None:
+                    sts2 = gridshard.constrain(sts2, gs)
                 return (sts2, k), res
 
             (states, _), results = jax.lax.scan(
@@ -425,6 +495,15 @@ class ScenarioGrid:
                 "cut_mean": jnp.mean(results.cut.astype(jnp.float32),
                                      axis=(0, 2)),
             }
+            if gs is not None:
+                # Padded cells must not pollute anything the caller sees.
+                # All summary reductions above are per-cell, so applying the
+                # validity mask IS the [:b] slice (gs.mask() stays available
+                # for callers doing their own cross-cell aggregation on
+                # padded arrays).
+                summary = {name: v[:b] for name, v in summary.items()}
+                results = gridshard.unpad(results, gs, lead=1)
+                states = gridshard.unpad(states, gs)
             return states, results, summary
 
         return jax.jit(rollout)

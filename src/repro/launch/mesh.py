@@ -25,6 +25,27 @@ def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def make_cells_mesh(n_devices: int | None = None, *, model: int = 1):
+    """1-D ``("cells",)`` mesh for sharding a ScenarioGrid's stacked cell
+    axis (see repro.core.gridshard).
+
+    ``n_devices=None`` uses every live device (on CPU, force several with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
+    initializes).  ``model > 1`` reserves a trailing "model" axis --
+    ``("cells", "model")`` -- so a future per-cell tensor-parallel dimension
+    can slot in without relayout; cells then get ``n_devices // model``
+    shards.
+    """
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError("need at least one device")
+    if model > 1:
+        if n % model:
+            raise ValueError(f"{n} devices not divisible by model={model}")
+        return jax.make_mesh((n // model, model), ("cells", "model"))
+    return jax.make_mesh((n,), ("cells",))
+
+
 def elastic_mesh(target_model: int = 16):
     """Elastic variant: builds the largest (data, model) mesh the *live*
     device set supports -- used by the runtime's restart-after-failure path

@@ -206,7 +206,10 @@ def batch_shardings(mesh, cfg, batch_shape: Any, *, shard_batch=True):
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
     def fn(path, leaf):
-        if not shard_batch or leaf.shape[0] % _mesh_prod(mesh, dp) != 0:
+        # 0-d leaves (e.g. step counters riding along in an input tree) have
+        # no batch dim to shard: replicate instead of indexing shape[0].
+        if (not shard_batch or leaf.ndim == 0
+                or leaf.shape[0] % _mesh_prod(mesh, dp) != 0):
             return NamedSharding(mesh, P())
         rest = [None] * (len(leaf.shape) - 1)
         return NamedSharding(mesh, P(dp, *rest))
@@ -251,15 +254,17 @@ def cache_shardings(mesh, cfg, cache_shape: Any, batch: int):
                 # combine: seq carries model; nothing else shardable
                 pass
             return NamedSharding(mesh, P(*lead, batch_ax, seq_ax, kv_ax, None))
-        if leaf.ndim >= 2 and shape[-2 if leaf.ndim > 2 else 0] == batch:
-            pass
-        # recurrent states / conv tails / positions: shard batch when possible
-        stacked_lead = (None,) if leaf.ndim >= 1 and leaf.shape[0] not in (batch,) else ()
-        for i, dim in enumerate(shape):
-            if dim == batch and batch % dp_n == 0:
-                spec = [None] * leaf.ndim
-                spec[i] = dp
-                return NamedSharding(mesh, P(*spec))
+        # Recurrent states / ring positions / conv tails: shard the batch dim
+        # only where the cache layout puts it -- leading for tail leaves
+        # (B, ...), second for stacked leaves (units, B, ...).  Matching B at
+        # arbitrary positions would shard dims that merely coincide with the
+        # batch size (e.g. a (heads, d, B)-shaped tensor's last dim).
+        if dp and batch % dp_n == 0 and leaf.ndim >= 1:
+            if shape[0] == batch:
+                return NamedSharding(mesh, P(dp, *[None] * (leaf.ndim - 1)))
+            if leaf.ndim >= 2 and shape[1] == batch:
+                return NamedSharding(
+                    mesh, P(None, dp, *[None] * (leaf.ndim - 2)))
         return NamedSharding(mesh, P())
     return jax.tree_util.tree_map_with_path(fn, cache_shape)
 

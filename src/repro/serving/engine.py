@@ -5,6 +5,18 @@ The ES side of the paper's system: requests (prompts) arrive continuously;
 the engine prefills them into free slots and steps all active slots together
 (synchronized decode).  Finished sequences free their slot for the next
 queued request.  Works on any decoder-only arch config.
+
+Known limitation -- mixed-length prompt batches are approximate.  ``_admit``
+left-pads shorter prompts with token 0, but ``transformer.prefill`` applies
+a plain causal mask with positions ``arange(S)`` and takes no padding mask:
+real tokens attend the pad positions (and sit at shifted RoPE positions), so
+a padded prompt's logits differ slightly from its solo run.  Equal-length
+prompt batches involve no padding and are EXACT -- engine outputs match the
+monolithic prefill+decode token-for-token (pinned by
+tests/test_serving.py::test_engine_batch_matches_solo_equal_lengths).
+Masking padding properly needs an attention-mask argument threaded through
+``models.attention``; until then, callers that need exactness should submit
+equal-length batches (or slots=1).
 """
 from __future__ import annotations
 
@@ -34,6 +46,7 @@ class ServingEngine:
         self.s_max = s_max
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
+        self._completed: list[Request] = []
         self.remaining = np.zeros(slots, np.int32)
         self.cache = None
         self._decode = jax.jit(
@@ -50,6 +63,10 @@ class ServingEngine:
         Synchronized-batch simplification: admission happens when ALL slots
         are free (prompts share one prefill); a production engine would use
         per-slot position tracking -- noted in DESIGN.md.
+
+        Shorter prompts are LEFT-padded with token 0 and the prefill gets no
+        padding mask, so mixed-length batches are approximate (see the module
+        docstring); equal-length batches are exact.
         """
         if any(r is not None for r in self.active) or not self.queue:
             return
@@ -91,15 +108,29 @@ class ServingEngine:
             if self.remaining[i] <= 0:
                 r.done = True
                 self.active[i] = None
+                self._completed.append(r)
             else:
                 alive = True
         if not alive and not self.queue:
             self.cache = None
         return True
 
-    def run_until_idle(self, max_steps: int = 10_000):
-        finished = []
+    def pop_completed(self) -> list[Request]:
+        """Drain and return requests finished since the last drain, in
+        completion order.  Callers driving the engine through ``step()``
+        directly should call this each tick -- completions are held until
+        drained, so an undrained engine retains every finished Request.
+        """
+        finished, self._completed = self._completed, []
+        return finished
+
+    def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until the queue and all slots drain (or ``max_steps``).
+
+        Returns every request that completed during (or before, via manual
+        ``step`` calls) this run, in completion order.
+        """
         for _ in range(max_steps):
             if not self.step():
                 break
-        return finished
+        return self.pop_completed()

@@ -1,0 +1,223 @@
+"""Device-sharded ScenarioGrid (repro.core.gridshard): placement, padding
+mask, and sharded-vs-unsharded rollout parity.
+
+Tier-1 runs these on one device (padding forced via ``pad_to``); CI adds a
+forced-multi-device CPU leg (``XLA_FLAGS=--xla_force_host_platform_
+device_count=8``) where the same tests exercise real 8-way partitioning,
+including an uneven B=6 grid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding
+
+from repro.core import gridshard
+from repro.core import scenarios as sc
+from repro.core.lymdo import eval_policy_batched, run_fixed_batched
+from repro.launch.mesh import make_cells_mesh
+
+N_DEV = len(jax.devices())
+
+
+def _forced_pad_to(b: int) -> int | None:
+    """Padded width that guarantees pad > 0 on any device count."""
+    natural = -(-b // N_DEV) * N_DEV
+    return natural + N_DEV if natural == b else None
+
+
+# ---------------------------------------------------------------------------
+# Plan / pad / mask units
+# ---------------------------------------------------------------------------
+
+def test_plan_rounds_up_to_device_multiple():
+    mesh = make_cells_mesh()
+    gs = gridshard.plan(3 * N_DEV, mesh)
+    assert gs.b_padded == 3 * N_DEV and gs.pad == 0
+    gs = gridshard.plan(3 * N_DEV + 1, mesh)
+    assert gs.b_padded == 4 * N_DEV
+    assert gs.pad == N_DEV - 1
+    assert gs.b_padded % gs.n_shards == 0
+
+
+def test_plan_validates():
+    mesh = make_cells_mesh()
+    with pytest.raises(ValueError):
+        gridshard.plan(2, mesh, axis="nope")
+    with pytest.raises(ValueError):
+        gridshard.plan(0, mesh)
+    with pytest.raises(ValueError):           # pad_to below the natural width
+        gridshard.plan(2, mesh, pad_to=1)
+    with pytest.raises(ValueError):           # b_padded < b
+        gridshard.GridSharding(mesh=mesh, b=2 * N_DEV, b_padded=N_DEV)
+
+
+def test_pad_unpad_roundtrip_and_mask():
+    mesh = make_cells_mesh()
+    b_padded = (-(-3 // N_DEV) + 1) * N_DEV   # one extra shard of padding
+    gs = gridshard.GridSharding(mesh=mesh, b=3, b_padded=b_padded)
+    pad = gs.pad
+    assert pad > 0
+    tree = {"a": jnp.arange(6.0).reshape(3, 2), "b": jnp.arange(3)}
+    padded = gridshard.pad_cells(tree, gs)
+    assert padded["a"].shape == (b_padded, 2)
+    # edge replication: padded cells copy the last real cell
+    np.testing.assert_array_equal(np.asarray(padded["a"][3:]),
+                                  np.tile(np.asarray(tree["a"][2:]),
+                                          (pad, 1)))
+    back = gridshard.unpad(padded, gs)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    mask = np.asarray(gs.mask())
+    assert mask.shape == (b_padded,)
+    assert mask[:3].all() and not mask[3:].any()
+
+
+def test_scalar_leaves_replicate_through_pad_place_unpad():
+    """0-d riders in a pytree must not crash the layout helpers (the same
+    bug class batch_shardings had): they replicate and pass through."""
+    mesh = make_cells_mesh()
+    gs = gridshard.GridSharding(mesh=mesh, b=2, b_padded=2 * N_DEV)
+    assert gs.spec(0) == gridshard.P()
+    tree = {"vec": jnp.arange(2.0), "scalar": jnp.float32(3.5)}
+    padded = gridshard.pad_cells(tree, gs)
+    assert padded["scalar"].ndim == 0
+    placed = gridshard.place(padded, gs)
+    assert placed["scalar"].sharding.spec == ()
+    constrained = gridshard.constrain(placed, gs)
+    back = gridshard.unpad(constrained, gs)
+    assert float(back["scalar"]) == 3.5
+    np.testing.assert_array_equal(np.asarray(back["vec"]),
+                                  np.asarray(tree["vec"]))
+
+
+def test_cell_keys_independent_of_padding():
+    key = jax.random.PRNGKey(7)
+    k_plain = jax.random.key_data(gridshard.cell_keys(key, 5))
+    k_pad = jax.random.key_data(gridshard.cell_keys(key, 5, 5 + N_DEV))
+    np.testing.assert_array_equal(np.asarray(k_pad[:5]), np.asarray(k_plain))
+    # padded slots clamp to the last real cell's key
+    np.testing.assert_array_equal(
+        np.asarray(k_pad[5:]), np.tile(np.asarray(k_plain[4:5]), (N_DEV, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Grid placement
+# ---------------------------------------------------------------------------
+
+def _grid_pair(b: int, pad_to=None, ues: int = 3, seed: int = 5):
+    cells = sc.multicell_grid(cells=b, ues=ues, seed=seed)
+    plain = sc.ScenarioGrid(cells)
+    shard = sc.ScenarioGrid(cells).use_mesh(make_cells_mesh(), pad_to=pad_to)
+    return plain, shard
+
+
+def test_use_mesh_places_params_on_cells_axis():
+    _, g = _grid_pair(3, pad_to=_forced_pad_to(3))
+    gs = g.gridshard
+    assert gs is not None and g.b_run == gs.b_padded >= g.b
+    for leaf in jax.tree.leaves(g._run_params):
+        assert leaf.shape[0] == g.b_run
+        assert isinstance(leaf.sharding, NamedSharding)
+        assert leaf.sharding.spec[0] == "cells"
+    # the logical stack is untouched
+    assert g.params.L.shape[0] == g.b
+
+
+def test_params_for_rejects_unknown_width():
+    _, g = _grid_pair(3, pad_to=_forced_pad_to(3))
+    states = g.reset(jax.random.PRNGKey(0))
+    assert states.t.shape[0] == g.b_run
+    bad = jax.tree.map(lambda x: jnp.concatenate([x, x]), states)
+    with pytest.raises(ValueError):
+        g.step(bad, jnp.zeros((2 * g.b_run, g.n_ue), jnp.int32))
+
+
+def test_objective_tables_on_padded_states():
+    _, g = _grid_pair(4, pad_to=_forced_pad_to(4))
+    states = g.reset(jax.random.PRNGKey(1))
+    table = np.asarray(g.objective_tables(states, backend="lax"))
+    assert table.shape == (g.b_run, g.n_ue, g.num_cuts)
+    assert np.isfinite(table[table < 1e29]).all()
+
+
+# ---------------------------------------------------------------------------
+# Sharded == unsharded parity (the 1e-5 contract)
+# ---------------------------------------------------------------------------
+
+def _assert_parity(b: int, pad_to, policy: str, steps: int = 12):
+    g_plain, g_shard = _grid_pair(b, pad_to=pad_to)
+    st_p, res_p, sum_p = g_plain.rollout(policy, steps=steps, seed=3)
+    st_s, res_s, sum_s = g_shard.rollout(policy, steps=steps, seed=3)
+    assert set(sum_p) == set(sum_s)
+    for name in sum_p:
+        assert np.asarray(sum_s[name]).shape == (b,)
+        np.testing.assert_allclose(np.asarray(sum_s[name]),
+                                   np.asarray(sum_p[name]),
+                                   rtol=1e-5, atol=1e-7, err_msg=name)
+    for got, want in zip(jax.tree.leaves(res_s), jax.tree.leaves(res_p)):
+        assert got.shape == want.shape     # logical B, padding sliced off
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-7)
+    for got, want in zip(jax.tree.leaves(st_s), jax.tree.leaves(st_p)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-7)
+    return g_shard
+
+
+def test_sharded_parity_even_b():
+    b = max(2, N_DEV)                     # a device multiple: no padding
+    g = _assert_parity(b, None, "oracle")
+    assert g.gridshard.pad == 0
+
+
+def test_sharded_parity_uneven_b_exercises_padding():
+    b = 6                                 # uneven on 8 (and forced elsewhere)
+    g = _assert_parity(b, _forced_pad_to(b), "oracle")
+    assert g.gridshard.pad > 0
+
+
+def test_sharded_parity_random_policy():
+    b = 5
+    g = _assert_parity(b, _forced_pad_to(b), "random")
+    assert g.gridshard.pad > 0
+
+
+# ---------------------------------------------------------------------------
+# Batched runners accept the sharded path transparently
+# ---------------------------------------------------------------------------
+
+def test_run_fixed_batched_transparent():
+    g_plain, g_shard = _grid_pair(3, pad_to=_forced_pad_to(3))
+    m_p, r_p = run_fixed_batched(g_plain, "local", episodes=2, steps=8,
+                                 seed=11)
+    m_s, r_s = run_fixed_batched(g_shard, "local", episodes=2, steps=8,
+                                 seed=11)
+    for name in m_p:
+        assert m_s[name].shape == (g_plain.b,)
+        np.testing.assert_allclose(m_s[name], m_p[name],
+                                   rtol=1e-5, atol=1e-7, err_msg=name)
+    np.testing.assert_allclose(np.asarray(r_s.delay), np.asarray(r_p.delay),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_eval_policy_batched_transparent():
+    from repro.core.policies import GaussianTanhPolicy
+    from repro.core.ppo import PPO, PPOConfig
+
+    rates = (1.0, 1.5, 2.0)
+    g_plain = sc.grid_from_names([("fixed_rate", {"rate": r})
+                                  for r in rates])
+    g_shard = sc.grid_from_names([("fixed_rate", {"rate": r})
+                                  for r in rates])
+    g_shard.use_mesh(make_cells_mesh(), pad_to=_forced_pad_to(g_shard.b))
+    env = g_plain.scenarios[0].build()
+    pol = GaussianTanhPolicy(env.obs_dim, env.L)
+    agent = PPO(pol, env.obs_dim, PPOConfig())
+    state = agent.init(jax.random.PRNGKey(0))
+    m_p, _ = eval_policy_batched(g_plain, agent, state, episodes=1, steps=6)
+    m_s, _ = eval_policy_batched(g_shard, agent, state, episodes=1, steps=6)
+    for name in m_p:
+        np.testing.assert_allclose(m_s[name], m_p[name],
+                                   rtol=1e-5, atol=1e-7, err_msg=name)

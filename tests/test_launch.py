@@ -9,7 +9,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import get_config
 from repro.launch import specs
 from repro.launch.dryrun import _result_bytes, collective_bytes
-from repro.launch.sharding import ShardingOptions, param_spec
+from repro.launch.sharding import (ShardingOptions, batch_shardings,
+                                   cache_shardings, param_spec)
 
 pytestmark = pytest.mark.filterwarnings("ignore")
 
@@ -109,6 +110,54 @@ def test_cell_supported_skip_rules():
     ok, _ = specs.cell_supported(get_config("gemma3-1b"),
                                  specs.SHAPES["long_500k"])
     assert ok  # 5:1 local:global qualifies
+
+
+# ---------------------------------------------------------------------------
+# batch / cache sharding maps (need a real mesh for NamedSharding)
+# ---------------------------------------------------------------------------
+
+def _real_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_batch_shardings_scalar_leaf_replicated():
+    """Regression: 0-d leaves used to raise IndexError on shape[0]."""
+    mesh = _real_mesh()
+    cfg = get_config("qwen3-0.6b")
+    tree = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    sh = batch_shardings(mesh, cfg, tree)
+    assert sh["step"].spec == P()
+    assert sh["tokens"].spec == P(("data",), None)
+
+
+def test_cache_shardings_batch_position_rules():
+    """Batch-dim matching is restricted to the layout's positions: leading
+    for tail leaves (B, ...), second for stacked leaves (units, B, ...).  A
+    dim that merely coincides with B elsewhere stays replicated (regression:
+    the old fallback sharded ANY dim equal to batch)."""
+    mesh = _real_mesh()
+    cfg = get_config("qwen3-0.6b")
+    B = 4
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    cache = {
+        "units": {"slot0": {"k": f32(2, B, 8, 2, 4),
+                            "v": f32(2, B, 8, 2, 4),
+                            "state": f32(2, B, 16)}},
+        "tail": [{"conv": f32(B, 3, 16)}],
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "coincidence": f32(3, 5, B),
+    }
+    sh = cache_shardings(mesh, cfg, cache, batch=B)
+    # KV tensors keep the dedicated (lead, batch, seq, kv, hd) rule
+    assert sh["units"]["slot0"]["k"].spec[1] == ("data",)
+    # stacked recurrent state: batch at dim 1
+    assert sh["units"]["slot0"]["state"].spec == P(None, ("data",), None)
+    # tail leaf: batch leading
+    assert sh["tail"][0]["conv"].spec == P(("data",), None, None)
+    # scalars and coincidental matches: replicated
+    assert sh["pos"].spec == P()
+    assert sh["coincidence"].spec == P()
 
 
 # ---------------------------------------------------------------------------
