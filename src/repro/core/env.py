@@ -21,20 +21,26 @@ Simulation constants default to the paper's Table I / Sec. V-A setup.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..profiling.profiles import LayerProfile, ProfileBatch
+from ..traffic import processes as arrivals
 from . import convex, energymem, queueing
 from .lyapunov import VirtualQueues, reward as lyapunov_reward, update_queues
 
-# Arrival-rate processes
+# Arrival-rate modes (MecConfig convenience enum).  These translate into the
+# corresponding ``repro.traffic.processes`` pytree at ``make_params`` time;
+# the env itself dispatches on the process object (``MecParams.arrival``),
+# so any registered arrival process -- not just these four -- plugs in via
+# ``MecConfig.arrival`` / the ``arrival=`` argument.
 LAM_IID_UNIFORM = 0   # lambda ~ U(low, high) iid per UE/slot (training default)
 LAM_FIXED = 1         # constant per-UE rate (Fig. 4 evaluation sweeps)
 LAM_PEAK = 2          # constant base + peak window (Fig. 5 stability runs)
+LAM_TRACE = 3         # replay a recorded (T, N) trace (needs arrival=...)
 
 
 def free_space_gain(distance_m=150.0, antenna_gain=3.0, carrier_hz=915e6,
@@ -69,16 +75,16 @@ class MecConfig:
     stability_margin: float = 1e-3    # C7 projection slack
     edge_queueing: bool = False       # eq. 4 (False) vs G/D/1 correction (True)
     queue_obs_scale: float = 1e-2     # observation scaling for Q/W entries
+    arrival: Any = None               # explicit arrival process (overrides
+                                      # lam_mode; see repro.traffic.processes)
 
 
 # Scalar MecConfig fields carried into MecParams as traced 0-d arrays (so a
 # stacked batch can vary them per cell).  ``edge_queueing`` stays static: it
 # selects a Python-level branch in ``_evaluate_p``.
 _FLOAT_FIELDS = ("w_hz", "n0", "p_tx", "rho", "kappa", "f_max_ue", "f_max_es",
-                 "v", "nu_e", "nu_c", "gamma_ue", "gamma_es", "lam_low",
-                 "lam_high", "peak_boost", "stability_margin",
-                 "queue_obs_scale")
-_INT_FIELDS = ("lam_mode", "peak_start", "peak_stop")
+                 "v", "nu_e", "nu_c", "gamma_ue", "gamma_es",
+                 "stability_margin", "queue_obs_scale")
 
 _PARAMS_DATA = (
     # raw per-layer tables, (N, C) -- kept for the Pallas sweep kernel route
@@ -87,10 +93,12 @@ _PARAMS_DATA = (
     "prefix_macs", "suffix_macs", "psi", "prefix_params", "suffix_params",
     "prefix_act_max", "suffix_act_max",
     # per-UE vectors, (N,)
-    "L", "e_budget", "c_budget", "lam_fixed",
+    "L", "e_budget", "c_budget",
+    # the arrival process (its own pytree; leaves (N,)/(T,N)/0-d)
+    "arrival",
     # per-cell scalars, 0-d (stack to (B,))
     "mean_gain",
-) + _FLOAT_FIELDS + _INT_FIELDS
+) + _FLOAT_FIELDS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +108,11 @@ class MecParams:
     All leaves are per-cell: tables are (N, C), vectors (N,), scalars 0-d.
     ``jnp.stack``-ing B instances (``repro.core.scenarios.stack_params``)
     yields a (B, ...) batch that ``jax.vmap`` maps back to this layout.
+
+    ``arrival`` is the per-slot arrival-rate process -- any registered
+    pytree from :mod:`repro.traffic.processes` (``(key, t) -> (N,) lam``).
+    Its *type* is part of the treedef, so cells of one stacked batch share
+    the process kind while its array leaves vary per cell.
     """
 
     macs: jax.Array
@@ -115,7 +128,7 @@ class MecParams:
     L: jax.Array
     e_budget: jax.Array
     c_budget: jax.Array
-    lam_fixed: jax.Array
+    arrival: Any
     mean_gain: jax.Array
     w_hz: jax.Array
     n0: jax.Array
@@ -129,14 +142,8 @@ class MecParams:
     nu_c: jax.Array
     gamma_ue: jax.Array
     gamma_es: jax.Array
-    lam_low: jax.Array
-    lam_high: jax.Array
-    peak_boost: jax.Array
     stability_margin: jax.Array
     queue_obs_scale: jax.Array
-    lam_mode: jax.Array
-    peak_start: jax.Array
-    peak_stop: jax.Array
     edge_queueing: bool = False
 
     @property
@@ -156,11 +163,40 @@ jax.tree_util.register_dataclass(
     MecParams, data_fields=list(_PARAMS_DATA), meta_fields=["edge_queueing"])
 
 
+def arrival_from_config(cfg: MecConfig, n: int,
+                        lam_fixed: Sequence[float] | None = None):
+    """Translate the MecConfig enum/knobs into an arrival-process pytree."""
+    base = jnp.asarray(np.full(n, cfg.lam_high, np.float32)
+                       if lam_fixed is None
+                       else np.asarray(lam_fixed, np.float32))
+    if cfg.lam_mode == LAM_IID_UNIFORM:
+        return arrivals.IidUniform(low=arrivals.per_ue(cfg.lam_low, n),
+                                   high=arrivals.per_ue(cfg.lam_high, n))
+    if cfg.lam_mode == LAM_FIXED:
+        return arrivals.FixedRate(lam=base)
+    if cfg.lam_mode == LAM_PEAK:
+        return arrivals.PeakWindow(base=base,
+                                   boost=jnp.float32(cfg.peak_boost),
+                                   start=jnp.int32(cfg.peak_start),
+                                   stop=jnp.int32(cfg.peak_stop))
+    if cfg.lam_mode == LAM_TRACE:
+        raise ValueError(
+            "LAM_TRACE needs an explicit process: pass arrival="
+            "repro.traffic.TraceArrivals(...) (e.g. Trace.load(p).process())")
+    raise ValueError(f"unknown lam_mode {cfg.lam_mode!r}")
+
+
 def make_params(profiles: Sequence[LayerProfile], cfg: MecConfig,
                 e_budget: Sequence[float], c_budget: Sequence[float],
                 mean_gain: float | None = None,
-                lam_fixed: Sequence[float] | None = None) -> MecParams:
-    """Build a single-cell MecParams from profiles + scenario constants."""
+                lam_fixed: Sequence[float] | None = None,
+                arrival=None) -> MecParams:
+    """Build a single-cell MecParams from profiles + scenario constants.
+
+    The arrival process resolves in priority order: the ``arrival`` argument,
+    then ``cfg.arrival``, then the classic ``cfg.lam_mode`` enum translation
+    (with ``lam_fixed`` seeding the fixed/peak base rates).
+    """
     batch = ProfileBatch(profiles)
     n = batch.n
     as_f32 = lambda a: jnp.asarray(a, jnp.float32)
@@ -168,6 +204,10 @@ def make_params(profiles: Sequence[LayerProfile], cfg: MecConfig,
     c_budget = as_f32(c_budget)
     if e_budget.shape != (n,) or c_budget.shape != (n,):
         raise ValueError("budgets must have one entry per UE")
+    if arrival is None:
+        arrival = cfg.arrival
+    if arrival is None:
+        arrival = arrival_from_config(cfg, n, lam_fixed)
     fields = dict(
         macs=as_f32(batch.macs),
         param_bytes=as_f32(batch.param_bytes),
@@ -182,16 +222,13 @@ def make_params(profiles: Sequence[LayerProfile], cfg: MecConfig,
         L=jnp.asarray(batch.L, jnp.int32),
         e_budget=e_budget,
         c_budget=c_budget,
-        lam_fixed=as_f32(np.full(n, cfg.lam_high) if lam_fixed is None
-                         else lam_fixed),
+        arrival=arrival,
         mean_gain=jnp.float32(free_space_gain() if mean_gain is None
                               else mean_gain),
         edge_queueing=cfg.edge_queueing,
     )
     for f in _FLOAT_FIELDS:
         fields[f] = jnp.float32(getattr(cfg, f))
-    for f in _INT_FIELDS:
-        fields[f] = jnp.int32(getattr(cfg, f))
     return MecParams(**fields)
 
 
@@ -239,13 +276,10 @@ def _draw_p(p: MecParams, key, t):
     k_gain, k_lam = jax.random.split(key)
     beta = jax.random.exponential(k_gain, (p.n_ue,), jnp.float32)
     gain = beta * p.mean_gain  # Rayleigh fading power
-    u = jax.random.uniform(k_lam, (p.n_ue,), jnp.float32,
-                           p.lam_low, p.lam_high)
-    in_peak = jnp.logical_and(t >= p.peak_start, t < p.peak_stop)
-    peak = p.lam_fixed + jnp.where(in_peak, p.peak_boost, 0.0)
-    lam = jax.lax.switch(
-        jnp.int32(p.lam_mode),
-        [lambda: u, lambda: p.lam_fixed, lambda: peak])
+    # Static dispatch on the arrival-process type (no lax.switch over dead
+    # branches): any repro.traffic process -- synthetic or trace replay --
+    # supplies this slot's per-UE rates.
+    lam = p.arrival(k_lam, t)
     return gain, lam
 
 
@@ -355,11 +389,13 @@ class MecEnv:
     def __init__(self, profiles: Sequence[LayerProfile], cfg: MecConfig,
                  e_budget: Sequence[float], c_budget: Sequence[float],
                  mean_gain: float | None = None,
-                 lam_fixed: Sequence[float] | None = None):
+                 lam_fixed: Sequence[float] | None = None,
+                 arrival=None):
         self.cfg = cfg
         self.batch = ProfileBatch(profiles)
         self.params = make_params(profiles, cfg, e_budget, c_budget,
-                                  mean_gain=mean_gain, lam_fixed=lam_fixed)
+                                  mean_gain=mean_gain, lam_fixed=lam_fixed,
+                                  arrival=arrival)
         # Max feasible cut per (UE, lambda) is recomputed each slot (C7).
         # Tables/budgets are exposed as read-only properties onto
         # self.params (below) so they can never diverge from what step()
@@ -367,13 +403,38 @@ class MecEnv:
         # or ``dataclasses.replace(env.params, ...)``.
 
     @property
+    def arrival(self):
+        return self.params.arrival
+
+    @arrival.setter
+    def arrival(self, process):
+        self.params = dataclasses.replace(self.params, arrival=process)
+
+    @property
     def lam_fixed(self) -> jax.Array:
-        return self.params.lam_fixed
+        """Base rate of a fixed/peak arrival process (back-compat view)."""
+        arr = self.params.arrival
+        if isinstance(arr, arrivals.FixedRate):
+            return arr.lam
+        if isinstance(arr, arrivals.PeakWindow):
+            return arr.base
+        raise AttributeError(
+            f"lam_fixed is only defined for fixed/peak arrivals, not "
+            f"{type(arr).__name__}; mutate env.arrival instead")
 
     @lam_fixed.setter
     def lam_fixed(self, value):
-        self.params = dataclasses.replace(
-            self.params, lam_fixed=jnp.asarray(value, jnp.float32))
+        arr = self.params.arrival
+        value = jnp.asarray(value, jnp.float32)
+        if isinstance(arr, arrivals.FixedRate):
+            arr = dataclasses.replace(arr, lam=value)
+        elif isinstance(arr, arrivals.PeakWindow):
+            arr = dataclasses.replace(arr, base=value)
+        else:
+            raise AttributeError(
+                f"lam_fixed is only defined for fixed/peak arrivals, not "
+                f"{type(arr).__name__}; set env.arrival instead")
+        self.params = dataclasses.replace(self.params, arrival=arr)
 
     # -- observation ------------------------------------------------------
 

@@ -20,7 +20,10 @@ module spreads that program across a device mesh's ``"cells"`` axis
   sharded==unsharded parity tests (tests/test_gridshard.py).
 
 Everything here is layout logic only; the per-cell physics stays the pure
-``step_p`` / ``reset_p`` of :mod:`repro.core.env`.
+``step_p`` / ``reset_p`` of :mod:`repro.core.env`.  That includes per-cell
+traffic state riding inside ``MecParams.arrival`` (e.g. a ``(B, T, N)``
+stacked trace/regime tensor of :mod:`repro.traffic.processes`): it pads,
+places and shards along the same lead cell axis as every other leaf.
 """
 from __future__ import annotations
 

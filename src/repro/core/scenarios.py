@@ -38,9 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..profiling.profiles import LayerProfile
+from ..traffic import processes as traffic
 from . import gridshard, sweep
-from .env import (LAM_FIXED, LAM_IID_UNIFORM, LAM_PEAK, MecConfig, MecEnv,
-                  MecParams, MecState, SlotResult, free_space_gain,
+from .env import (LAM_FIXED, LAM_IID_UNIFORM, LAM_PEAK, LAM_TRACE, MecConfig,
+                  MecEnv, MecParams, MecState, SlotResult, free_space_gain,
                   make_params, reset_p, step_p)
 
 # Scalars the Pallas sweep kernel bakes in at compile time; the kernel route
@@ -64,6 +65,8 @@ class Scenario:
     c_budget: tuple[float, ...]
     mean_gain: float | None = None          # None -> paper free-space default
     lam_fixed: tuple[float, ...] | None = None
+    arrival: object | None = None           # explicit repro.traffic process
+                                            # (overrides cfg.lam_mode)
     description: str = ""
 
     @property
@@ -74,13 +77,13 @@ class Scenario:
         return MecEnv(list(self.profiles), self.cfg, list(self.e_budget),
                       list(self.c_budget), mean_gain=self.mean_gain,
                       lam_fixed=None if self.lam_fixed is None
-                      else list(self.lam_fixed))
+                      else list(self.lam_fixed), arrival=self.arrival)
 
     def params(self) -> MecParams:
         return make_params(list(self.profiles), self.cfg, list(self.e_budget),
                            list(self.c_budget), mean_gain=self.mean_gain,
                            lam_fixed=None if self.lam_fixed is None
-                           else list(self.lam_fixed))
+                           else list(self.lam_fixed), arrival=self.arrival)
 
     def sweep_scalars(self) -> dict:
         """Host-side constants for the Pallas partition-sweep route."""
@@ -195,6 +198,81 @@ def hetero_fleet(n_ue: int = 8, seed: int = 0,
                     description="random device/budget/rate mix")
 
 
+@register("mmpp_burst")
+def mmpp_burst(seed: int = 0, rates: tuple[float, ...] = (0.5, 3.0),
+               p_stay: float = 0.92, horizon: int = 400,
+               n_alexnet: int = 2, n_resnet: int = 3) -> Scenario:
+    """Bursty cell: per-UE Markov-modulated (MMPP) rates over the paper fleet."""
+    profiles, e, c = _paper_fleet(n_alexnet, n_resnet)
+    arrival = traffic.make_mmpp(len(profiles), seed=seed, rates=rates,
+                                p_stay=p_stay, horizon=horizon)
+    return Scenario(name=f"mmpp_burst[{seed}]", cfg=MecConfig(),
+                    profiles=profiles, e_budget=e, c_budget=c,
+                    arrival=arrival,
+                    description="Markov-modulated bursty arrivals "
+                                f"(regimes {rates}, p_stay={p_stay:g})")
+
+
+@register("diurnal")
+def diurnal(base: float = 1.5, amp: float = 1.0, period: float = 200.0,
+            phase: float = 0.0, n_alexnet: int = 2,
+            n_resnet: int = 3) -> Scenario:
+    """Day/night cell: sinusoidal arrival rates around a base load."""
+    profiles, e, c = _paper_fleet(n_alexnet, n_resnet)
+    n = len(profiles)
+    arrival = traffic.Diurnal(base=traffic.per_ue(base, n),
+                              amp=traffic.per_ue(amp, n),
+                              period=jnp.float32(period),
+                              phase=jnp.float32(phase))
+    return Scenario(name=f"diurnal[{base:g}±{amp:g}]", cfg=MecConfig(),
+                    profiles=profiles, e_budget=e, c_budget=c,
+                    arrival=arrival,
+                    description=f"sinusoidal load, period {period:g} slots")
+
+
+@register("flash_crowd")
+def flash_crowd(base: float = 1.0, spike: float = 2.5, t0: int = 100,
+                decay: float = 30.0, n_alexnet: int = 2,
+                n_resnet: int = 3) -> Scenario:
+    """Flash-crowd cell: base load + an exponentially decaying spike at t0."""
+    profiles, e, c = _paper_fleet(n_alexnet, n_resnet)
+    n = len(profiles)
+    arrival = traffic.FlashCrowd(base=traffic.per_ue(base, n),
+                                 spike=jnp.float32(spike),
+                                 t0=jnp.int32(t0), decay=jnp.float32(decay))
+    return Scenario(name=f"flash_crowd[{spike:g}@{t0}]", cfg=MecConfig(),
+                    profiles=profiles, e_budget=e, c_budget=c,
+                    arrival=arrival,
+                    description=f"flash crowd +{spike:g} req/s at slot {t0}")
+
+
+@register("trace_replay")
+def trace_replay(trace=None, path: str | None = None, offset: int = 0,
+                 seed: int = 0, rate_range: tuple[float, float] = (0.5, 2.5),
+                 ) -> Scenario:
+    """Replay a recorded arrival trace (repro.traffic.Trace) as the cell load.
+
+    ``trace`` is a :class:`repro.traffic.Trace` (or ``path`` names a saved
+    ``.npz``); the cell's fleet is a ``hetero_fleet`` sized to the trace's UE
+    count.  ``offset`` rotates the trace so B cells built from one recording
+    replay de-phased copies (per-cell diversity without per-cell recordings).
+    """
+    from ..traffic.trace import Trace
+    if trace is None:
+        if path is None:
+            raise ValueError("trace_replay needs trace= or path=")
+        trace = Trace.load(path)
+    if offset:
+        trace = trace.shifted(offset)
+    cell = hetero_fleet(n_ue=trace.n_ue, seed=seed, rate_range=rate_range)
+    return dataclasses.replace(
+        cell, name=f"trace_replay[{trace.n_ue}ue+{offset}]",
+        cfg=MecConfig(lam_mode=LAM_TRACE), arrival=trace.process(),
+        lam_fixed=None,
+        description=f"replays a {trace.n_slots}-slot recorded trace "
+                    f"(offset {offset})")
+
+
 def multicell_grid(cells: int = 16, ues: int = 8, seed: int = 0,
                    d_min_m: float = 60.0, d_max_m: float = 300.0,
                    rate_range: tuple[float, float] = (0.5, 2.5),
@@ -254,7 +332,9 @@ def stack_params(params_list: Sequence[MecParams]) -> MecParams:
     """Stack B single-cell param pytrees into one (B, ...) pytree.
 
     Cells must share the UE count; the cut axis is padded to the widest cell.
-    ``edge_queueing`` (a static field) must agree across cells.
+    ``edge_queueing`` (a static field) must agree across cells, and so must
+    the arrival-process *type* (and its array shapes, e.g. trace horizons) --
+    the process class is part of the treedef the vmap dispatches on.
     """
     if not params_list:
         raise ValueError("need at least one cell")
@@ -264,6 +344,12 @@ def stack_params(params_list: Sequence[MecParams]) -> MecParams:
     eq = {p.edge_queueing for p in params_list}
     if len(eq) != 1:
         raise ValueError("cells must share edge_queueing (static field)")
+    kinds = {type(p.arrival) for p in params_list}
+    if len(kinds) != 1:
+        raise ValueError(
+            "cells must share the arrival-process type (it is static "
+            "treedef, like edge_queueing); got "
+            f"{sorted(k.__name__ for k in kinds)}")
     cmax = max(p.num_cuts for p in params_list)
     padded = [_pad_cuts(p, cmax) for p in params_list]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *padded)

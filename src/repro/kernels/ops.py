@@ -40,9 +40,25 @@ def _pallas_active() -> bool:
 _BLOCKED_THRESHOLD = 2048 * 2048
 
 
-def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0):
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    pad_mask=None):
     """GQA attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd).
-    kind: "causal" | "local" (sliding window) | "full"."""
+    kind: "causal" | "local" (sliding window) | "full".
+
+    ``pad_mask`` (B, Sk) bool marks VALID key positions per row (False =
+    left-pad filler): the serving engine's ragged prompt batches.  The
+    ragged path runs the dense reference with the combined causal+pad mask
+    -- prefill widths are engine-bucket sized, so the dense score tile is
+    small; the Pallas kernel has no ragged-batch support yet.
+    """
+    if pad_mask is not None:
+        sq, sk = q.shape[1], k.shape[1]
+        base = ref.build_mask(kind, sq, sk, window)     # (Sq, Sk) or None
+        mask = jnp.broadcast_to(pad_mask[:, None, :],
+                                (q.shape[0], sq, sk))
+        if base is not None:
+            mask = mask & base[None]
+        return ref.attention_ref(q, k, v, mask=mask)
     if _pallas_active():
         from .flash_attention import flash_attention_pallas
         return flash_attention_pallas(q, k, v, kind=kind, window=window,

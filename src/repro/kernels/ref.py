@@ -11,7 +11,8 @@ _NEG = -1e30
 def attention_ref(q, k, v, mask=None):
     """GQA attention reference (dense scores; small shapes / kernel oracle).
 
-    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); mask broadcastable to (Sq, Sk).
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); mask (Sq, Sk) -- shared across
+    the batch -- or (B, Sq, Sk) for per-row (ragged/padded) masking.
     Softmax in fp32; output in q.dtype; returns (B, Sq, H, hd).
     """
     b, sq, h, hd = q.shape
@@ -22,7 +23,9 @@ def attention_ref(q, k, v, mask=None):
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     if mask is not None:
-        scores = jnp.where(mask[None, None, None, :, :], scores, _NEG)
+        m = (mask[:, None, None, :, :] if mask.ndim == 3
+             else mask[None, None, None, :, :])
+        scores = jnp.where(m, scores, _NEG)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
     return out.reshape(b, sq, h, hd).astype(q.dtype)

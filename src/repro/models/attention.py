@@ -80,8 +80,13 @@ def _project_kv(p, cfg, x):
     return k, v
 
 
-def self_attention(p, cfg, x, positions, *, kind: str):
-    """Train/prefill full-sequence self-attention.  kind: g|l|e."""
+def self_attention(p, cfg, x, positions, *, kind: str, pad_mask=None):
+    """Train/prefill full-sequence self-attention.  kind: g|l|e.
+
+    ``positions`` may be (S,) or per-row (B, S) -- left-padded batches pass
+    shifted positions so RoPE sees each row's true token index.  ``pad_mask``
+    (B, S) marks valid (non-pad) positions; see ``ops.flash_attention``.
+    """
     from ..kernels import ops
     q = _project_q(p, cfg, x)
     k, v = _project_kv(p, cfg, x)
@@ -89,7 +94,8 @@ def self_attention(p, cfg, x, positions, *, kind: str):
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
     akind = {"l": "local", "e": "full"}.get(kind, "causal")
-    out = ops.flash_attention(q, k, v, kind=akind, window=cfg.window)
+    out = ops.flash_attention(q, k, v, kind=akind, window=cfg.window,
+                              pad_mask=pad_mask)
     out = out.reshape(*x.shape[:-1], -1)
     return out @ p["wo"], (k, v)
 
@@ -146,12 +152,21 @@ def prefill_into_ring(cache: RingCache, k, v, length: int) -> RingCache:
     return RingCache(k=new_k, v=new_v, pos=new_pos)
 
 
-def decode_self_attention(p, cfg, x, cache, pos, *, kind: str):
-    """Single-token decode: x (B, 1, D); returns (out, new_cache)."""
+def decode_self_attention(p, cfg, x, cache, pos, *, kind: str, pad=None):
+    """Single-token decode: x (B, 1, D); returns (out, new_cache).
+
+    ``pos`` is the shared cache write position (synchronized batch).  For a
+    left-padded batch, ``pad`` (B,) gives each row's pad count: RoPE uses the
+    semantic position ``pos - pad`` and cache slots below ``pad`` (the pad
+    filler K/V written during prefill) are masked invalid.
+    """
     q = _project_q(p, cfg, x)               # (B, 1, H, hd)
     k_new, v_new = _project_kv(p, cfg, x)   # (B, 1, KV, hd)
     if cfg.rope_theta:
-        pvec = jnp.asarray(pos)[None]
+        if pad is None:
+            pvec = jnp.asarray(pos)[None]           # (1,) shared position
+        else:
+            pvec = (pos - pad)[:, None]             # (B, 1) per-row position
         q = rope(q, pvec, cfg.rope_theta)
         k_new = rope(k_new, pvec, cfg.rope_theta)
 
@@ -166,13 +181,18 @@ def decode_self_attention(p, cfg, x, cache, pos, *, kind: str):
         pos_buf = jax.lax.dynamic_update_slice_in_dim(
             cache.pos, jnp.full((cache.pos.shape[0], 1), pos, jnp.int32), slot, 1)
         valid = (pos_buf >= 0) & (pos_buf >= pos - w + 1)   # (B, W)
+        if pad is not None:
+            valid = valid & (pos_buf >= pad[:, None])
         out = ops.decode_attention(q, k, v, valid_mask=valid)
         new_cache = RingCache(k=k, v=v, pos=pos_buf)
     else:
         k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, pos, 1)
         v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, pos, 1)
-        valid = (jnp.arange(k.shape[1]) <= pos)[None, :]    # (1, S_max)
+        slots = jnp.arange(k.shape[1])
+        valid = (slots <= pos)[None, :]                     # (1, S_max)
         valid = jnp.broadcast_to(valid, (k.shape[0], k.shape[1]))
+        if pad is not None:
+            valid = valid & (slots[None, :] >= pad[:, None])
         out = ops.decode_attention(q, k, v, valid_mask=valid)
         new_cache = KVCache(k=k, v=v)
     out = out.reshape(*x.shape[:-1], -1)

@@ -110,8 +110,15 @@ def param_count(params) -> int:
 # ---------------------------------------------------------------------------
 
 def _layer_full(p, cfg, kind, x, positions, ctx, want_cache: bool,
-                s_max: int = 0):
-    """Apply one layer to a full sequence.  Returns (x, aux, cache)."""
+                s_max: int = 0, pad_mask=None):
+    """Apply one layer to a full sequence.  Returns (x, aux, cache).
+
+    ``pad_mask`` (B, S) marks valid (non-left-pad) positions for attention
+    layers of ragged serving batches.  Recurrent kinds ("r"/"s") scan the
+    whole sequence including pads -- masking them exactly would need reset
+    threading through the scan kernels, so ragged exactness currently covers
+    attention stacks only (the serving engine's decoder-only configs).
+    """
     aux = jnp.zeros((), jnp.float32)
     cache = ()
     cdt = dtype_of(cfg.compute_dtype)
@@ -142,7 +149,8 @@ def _layer_full(p, cfg, kind, x, positions, ctx, want_cache: bool,
     if kind == "d":
         normed = rms_norm(x, p["norm1"])
         out, (k, v) = attn.self_attention(p["attn"], cfg, normed,
-                                          positions, kind="g")
+                                          positions, kind="g",
+                                          pad_mask=pad_mask)
         x = x + out
         kv = attn.context_kv(p["xattn"], cfg, ctx)
         x = x + attn.cross_attention(p["xattn"], cfg,
@@ -156,7 +164,7 @@ def _layer_full(p, cfg, kind, x, positions, ctx, want_cache: bool,
     akind = "l" if kind == "l" else ("e" if kind == "e" else "g")
     normed = rms_norm(x, p["norm1"])
     out, (k, v) = attn.self_attention(p["attn"], cfg, normed, positions,
-                                      kind=akind)
+                                      kind=akind, pad_mask=pad_mask)
     x = x + out
     if kind == "m":
         y, aux = ffn_mod.apply_moe(p["moe"], cfg, rms_norm(x, p["norm2"]))
@@ -179,7 +187,7 @@ def _fill_kv(cfg, k, v, s_max, dtype):
 
 
 def _run_stack(params, cfg, pattern, x, positions, ctx, want_cache,
-               s_max=0, remat=False):
+               s_max=0, remat=False, pad_mask=None):
     """Scan over stacked units, then apply tail layers.  Returns
     (x, aux_sum, caches) with caches = {"units": ..., "tail": [...]}.
     """
@@ -190,7 +198,8 @@ def _run_stack(params, cfg, pattern, x, positions, ctx, want_cache,
         x = shardctx.constrain(x, "dp", "sp", None)
         for i, kind in enumerate(pattern):
             x, a, c = _layer_full(unit_p[f"slot{i}"], cfg, kind, x,
-                                  positions, ctx, want_cache, s_max)
+                                  positions, ctx, want_cache, s_max,
+                                  pad_mask=pad_mask)
             x = shardctx.constrain(x, "dp", "sp", None)
             aux = aux + a
             caches[f"slot{i}"] = c
@@ -225,7 +234,7 @@ def _run_stack(params, cfg, pattern, x, positions, ctx, want_cache,
     tail_caches = []
     for tp, kind in zip(params.get("tail", []), cfg.tail_pattern):
         x, a, c = _layer_full(tp, cfg, kind, x, positions, ctx,
-                              want_cache, s_max)
+                              want_cache, s_max, pad_mask=pad_mask)
         aux = aux + a
         tail_caches.append(c)
     return x, aux, {"units": unit_caches, "tail": tail_caches}
@@ -278,24 +287,43 @@ def forward_train(params, cfg, batch):
     return _logits(params, cfg, x), aux
 
 
-def prefill(params, cfg, batch, s_max: int):
+def prefill(params, cfg, batch, s_max: int, pad=None):
     """Build the serving cache from a prompt.  Returns (last-token logits
     (B,V), cache).  ``s_max`` sizes the KV buffers (prompt + decode budget).
+
+    ``pad`` (B,) int32 gives each row's LEFT-pad token count for ragged
+    batches: attention masks the pad positions and RoPE uses the shifted
+    per-row positions, making a padded prompt's logits exactly equal its
+    solo run (attention stacks; see ``_layer_full`` on recurrent kinds).
+    The pad vector rides in the cache (``caches["pad"]``) so ``decode_step``
+    keeps masking those slots; padless calls leave the cache structure
+    unchanged.
     """
     tokens = batch["tokens"]
     x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
     ctx = _context(params, cfg, batch)
-    positions = jnp.arange(tokens.shape[1])
+    s = tokens.shape[1]
+    if pad is None:
+        positions = jnp.arange(s)
+        pad_mask = None
+    else:
+        pad = jnp.asarray(pad, jnp.int32)
+        # row i's first real token sits at index pad[i] -> position 0
+        positions = jnp.maximum(jnp.arange(s)[None, :] - pad[:, None], 0)
+        pad_mask = jnp.arange(s)[None, :] >= pad[:, None]      # (B, S) valid
     x, _, caches = _run_stack(params, cfg, cfg.block_pattern, x, positions,
-                              ctx, want_cache=True, s_max=s_max, remat=False)
-    caches["pos"] = jnp.int32(tokens.shape[1])
+                              ctx, want_cache=True, s_max=s_max, remat=False,
+                              pad_mask=pad_mask)
+    caches["pos"] = jnp.int32(s)
+    if pad is not None:
+        caches["pad"] = pad
     logits = _logits(params, cfg, x[:, -1:])[:, 0]
     return logits, caches
 
 
 # -- decode -------------------------------------------------------------------
 
-def _layer_decode(p, cfg, kind, x, cache, pos):
+def _layer_decode(p, cfg, kind, x, cache, pos, pad=None):
     """Single-token layer step.  Returns (x, new_cache)."""
     if kind == "s":
         y, cache = ssm_mod.apply_ssm_decode(p["ssm"], cfg, x, cache)
@@ -315,7 +343,8 @@ def _layer_decode(p, cfg, kind, x, cache, pos):
     if kind == "d":
         normed = rms_norm(x, p["norm1"])
         out, new_self = attn.decode_self_attention(p["attn"], cfg, normed,
-                                                   cache["self"], pos, kind="g")
+                                                   cache["self"], pos,
+                                                   kind="g", pad=pad)
         x = x + out
         x = x + attn.decode_cross_attention(p["xattn"], cfg,
                                             rms_norm(x, p["norm_x"]),
@@ -326,7 +355,7 @@ def _layer_decode(p, cfg, kind, x, cache, pos):
     akind = "l" if kind == "l" else "g"
     normed = rms_norm(x, p["norm1"])
     out, cache = attn.decode_self_attention(p["attn"], cfg, normed, cache,
-                                            pos, kind=akind)
+                                            pos, kind=akind, pad=pad)
     x = x + out
     if kind == "m":
         y, _ = ffn_mod.apply_moe(p["moe"], cfg, rms_norm(x, p["norm2"]))
@@ -338,8 +367,11 @@ def _layer_decode(p, cfg, kind, x, cache, pos):
 
 def decode_step(params, cfg, caches, tokens):
     """One decode step.  tokens: (B,) int32.  Returns (logits (B,V), caches).
-    The write position comes from ``caches["pos"]`` (synchronized batch)."""
+    The write position comes from ``caches["pos"]`` (synchronized batch);
+    a ``caches["pad"]`` vector (ragged prefill) keeps per-row RoPE positions
+    shifted and pad cache slots masked."""
     pos = caches["pos"]
+    pad = caches.get("pad")
     x = params["embed"][tokens][:, None, :].astype(dtype_of(cfg.compute_dtype))
 
     def scan_body(x, inp):
@@ -347,7 +379,7 @@ def decode_step(params, cfg, caches, tokens):
         new_c = {}
         for i, kind in enumerate(cfg.block_pattern):
             x, c = _layer_decode(unit_p[f"slot{i}"], cfg, kind, x,
-                                 unit_c[f"slot{i}"], pos)
+                                 unit_c[f"slot{i}"], pos, pad)
             new_c[f"slot{i}"] = c
         return x, new_c
 
@@ -357,10 +389,12 @@ def decode_step(params, cfg, caches, tokens):
     new_tail = []
     for tp, kind, tc in zip(params.get("tail", []), cfg.tail_pattern,
                             caches["tail"]):
-        x, c = _layer_decode(tp, cfg, kind, x, tc, pos)
+        x, c = _layer_decode(tp, cfg, kind, x, tc, pos, pad)
         new_tail.append(c)
 
     logits = _logits(params, cfg, x)[:, 0]
     new_caches = {"units": new_unit_caches, "tail": new_tail,
                   "pos": pos + 1}
+    if pad is not None:
+        new_caches["pad"] = pad
     return logits, new_caches

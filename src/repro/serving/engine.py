@@ -6,17 +6,27 @@ the engine prefills them into free slots and steps all active slots together
 (synchronized decode).  Finished sequences free their slot for the next
 queued request.  Works on any decoder-only arch config.
 
-Known limitation -- mixed-length prompt batches are approximate.  ``_admit``
-left-pads shorter prompts with token 0, but ``transformer.prefill`` applies
-a plain causal mask with positions ``arange(S)`` and takes no padding mask:
-real tokens attend the pad positions (and sit at shifted RoPE positions), so
-a padded prompt's logits differ slightly from its solo run.  Equal-length
-prompt batches involve no padding and are EXACT -- engine outputs match the
-monolithic prefill+decode token-for-token (pinned by
-tests/test_serving.py::test_engine_batch_matches_solo_equal_lengths).
-Masking padding properly needs an attention-mask argument threaded through
-``models.attention``; until then, callers that need exactness should submit
-equal-length batches (or slots=1).
+Mixed-length prompt batches are EXACT: ``_admit`` left-pads shorter prompts
+and hands the per-row pad counts to ``transformer.prefill``, which masks the
+pad positions out of attention and shifts RoPE to each row's true token
+index -- a padded prompt's tokens equal its solo run bit-for-bit (pinned by
+tests/test_serving.py::test_engine_mixed_lengths_match_solo).  The masking
+covers attention stacks; recurrent ("r"/"s") blocks still scan pads (see
+``transformer._layer_full``).
+
+Prefill shapes are BUCKETED: prompts pad up to the next power-of-two width
+(``prefill_buckets``), so the jitted prefill compiles once per bucket --
+steady-state serving triggers no recompiles regardless of prompt-length mix
+(pinned by tests/test_serving.py::test_prefill_bucketing_avoids_recompiles).
+The pad mask makes the extra bucket padding semantics-free, and bucket
+selection never eats the decode budget (``bucket + max_new <= s_max``; see
+``_bucket_width``).  Pad-free batches skip the mask entirely and keep the
+dense/Pallas kernel prefill path.
+
+A traffic recorder (duck-typed; see ``repro.traffic.recorder``) can observe
+the request lifecycle: the engine reports submit/admit/complete in units of
+its step clock (one ``step()`` call == one tick), which
+``TrafficRecorder.to_trace`` bins into a replayable arrival trace.
 """
 from __future__ import annotations
 
@@ -35,27 +45,81 @@ class Request:
     rid: int
     prompt: np.ndarray          # (S,) int32
     max_new: int = 16
+    ue: int | None = None       # originating UE (traffic-trace binning);
+                                # None -> recorder falls back to rid % n_ue
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def _bucket_ladder(s_max: int, lo: int = 8) -> tuple[int, ...]:
+    """Power-of-two prompt-width buckets up to s_max (always includes s_max)."""
+    buckets = []
+    w = lo
+    while w < s_max:
+        buckets.append(w)
+        w *= 2
+    buckets.append(s_max)
+    return tuple(buckets)
+
+
 class ServingEngine:
-    def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 128):
+    def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 128,
+                 prefill_buckets=None, recorder=None):
         self.cfg, self.params = cfg, params
         self.slots = slots
         self.s_max = s_max
+        self.prefill_buckets = tuple(sorted(
+            _bucket_ladder(s_max) if prefill_buckets is None
+            else prefill_buckets))
+        if not self.prefill_buckets or self.prefill_buckets[-1] > s_max:
+            raise ValueError(f"prefill buckets {self.prefill_buckets} must be "
+                             f"non-empty and <= s_max={s_max}")
+        self.recorder = recorder
+        self.clock = 0                       # engine ticks (step() calls)
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
         self._completed: list[Request] = []
         self.remaining = np.zeros(slots, np.int32)
         self.cache = None
+        # (slots, width, ragged?) triples traced so far == jit compilations
+        self._prefill_shapes: set[tuple] = set()
         self._decode = jax.jit(
             lambda cache, toks: transformer.decode_step(params, cfg, cache, toks))
         self._prefill = jax.jit(
-            lambda batch: transformer.prefill(params, cfg, batch, s_max=s_max))
+            lambda batch, pad: transformer.prefill(params, cfg, batch,
+                                                   s_max=s_max, pad=pad))
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill signatures traced so far (== jit compilations):
+        one per (slots, bucket width, ragged-or-not) combination."""
+        return len(self._prefill_shapes)
 
     def submit(self, req: Request):
         self.queue.append(req)
+        if self.recorder is not None:
+            self.recorder.record_submit(req.rid, self.clock, ue=req.ue)
+
+    def _bucket_width(self, width: int, max_new: int) -> int:
+        """Smallest bucket >= width that still leaves ``max_new`` KV slots.
+
+        Bucket slack must never eat the decode budget: prefill starts the
+        cache position at the bucket width, so ``bucket + max_new`` KV slots
+        are written overall and must fit in ``s_max`` (decode's
+        dynamic_update_slice would silently clamp past the end otherwise).
+        When every bucket that fits is narrower than needed, fall back to
+        the exact width (one extra compiled shape beats corrupt output);
+        if even that cannot fit, the request is genuinely oversized.
+        """
+        limit = self.s_max - max_new
+        if width > limit:
+            raise ValueError(
+                f"prompt width {width} + decode budget {max_new} exceeds "
+                f"s_max={self.s_max}")
+        for b in self.prefill_buckets:
+            if b >= width and b <= limit:
+                return b
+        return width
 
     def _admit(self):
         """Fill free slots with queued requests (batch prefill).
@@ -64,9 +128,10 @@ class ServingEngine:
         are free (prompts share one prefill); a production engine would use
         per-slot position tracking -- noted in DESIGN.md.
 
-        Shorter prompts are LEFT-padded with token 0 and the prefill gets no
-        padding mask, so mixed-length batches are approximate (see the module
-        docstring); equal-length batches are exact.
+        Shorter prompts are LEFT-padded to the batch's bucket width; the pad
+        counts flow into ``transformer.prefill`` as an attention mask +
+        position shift, so padding (mixed lengths AND bucket slack) never
+        changes any row's logits.
         """
         if any(r is not None for r in self.active) or not self.queue:
             return
@@ -75,22 +140,39 @@ class ServingEngine:
             batch.append(self.queue.popleft())
         while len(batch) < self.slots:       # pad with a copy (masked out)
             batch.append(Request(rid=-1, prompt=batch[0].prompt, max_new=0))
-        width = max(len(r.prompt) for r in batch)
+        width = self._bucket_width(max(len(r.prompt) for r in batch),
+                                   max(r.max_new for r in batch))
         toks = np.stack([np.pad(r.prompt, (width - len(r.prompt), 0))
-                         for r in batch])    # left-pad to common width
-        logits, cache = self._prefill({"tokens": jnp.asarray(toks, jnp.int32)})
+                         for r in batch])    # left-pad to the bucket width
+        pad = np.asarray([width - len(r.prompt) for r in batch], np.int32)
+        # A pad-free batch (all prompts exactly bucket-width) skips the mask
+        # entirely: prefill keeps its dense/Pallas kernel path and the cache
+        # carries no "pad" entry (the decode fast path).
+        pad_arg = jnp.asarray(pad) if pad.any() else None
+        self._prefill_shapes.add(toks.shape + (pad_arg is not None,))
+        logits, cache = self._prefill({"tokens": jnp.asarray(toks, jnp.int32)},
+                                      pad_arg)
         self.cache = cache
         nxt = np.asarray(jnp.argmax(logits, -1))
         for i, r in enumerate(batch):
             self.active[i] = r if r.rid >= 0 else None
             self.remaining[i] = r.max_new
-            if r.rid >= 0 and r.max_new > 0:
-                r.out.append(int(nxt[i]))
-                self.remaining[i] -= 1
+            if r.rid >= 0:
+                if self.recorder is not None:
+                    self.recorder.record_admit(r.rid, self.clock)
+                if r.max_new > 0:
+                    r.out.append(int(nxt[i]))
+                    self.remaining[i] -= 1
         self._last = nxt
 
     def step(self) -> bool:
-        """One engine iteration.  Returns False when idle."""
+        """One engine iteration (one clock tick).  Returns False when idle.
+
+        The clock advances on every call -- idle ticks included -- so a
+        driver that interleaves ``submit`` with ``step`` produces lifecycle
+        timestamps on one monotonic time base for the traffic recorder.
+        """
+        self.clock += 1
         self._admit()
         if self.cache is None or all(r is None for r in self.active):
             return False
@@ -109,6 +191,8 @@ class ServingEngine:
                 r.done = True
                 self.active[i] = None
                 self._completed.append(r)
+                if self.recorder is not None:
+                    self.recorder.record_complete(r.rid, self.clock)
             else:
                 alive = True
         if not alive and not self.queue:

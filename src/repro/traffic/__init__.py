@@ -1,0 +1,26 @@
+"""Traffic subsystem: arrival-process library + trace record/replay.
+
+Three pieces close the serving->trace->MEC loop:
+
+* :mod:`repro.traffic.processes` -- pure jittable arrival processes
+  (``(key, t) -> lam`` pytrees) that plug into ``MecParams.arrival``;
+* :mod:`repro.traffic.trace`     -- the canonical slot-indexed ``(T, N)``
+  rate-trace format (bit-exact ``.npz`` round-trip) and its replay process;
+* :mod:`repro.traffic.recorder`  -- records request lifecycles from a live
+  ``ServingEngine`` and bins them into that trace format.
+
+``python -m repro.traffic --list`` prints the generator/scenario catalogue;
+see ``docs/traffic.md`` for the full tour.
+"""
+from .processes import (Diurnal, FixedRate, FlashCrowd, IidUniform, MMPP,
+                        PROCESSES, PeakWindow, PoissonArrivals, TraceArrivals,
+                        arrival_process, make_mmpp, materialize, per_ue)
+from .recorder import RequestEvents, TrafficRecorder
+from .trace import Trace, from_process
+
+__all__ = [
+    "Diurnal", "FixedRate", "FlashCrowd", "IidUniform", "MMPP", "PROCESSES",
+    "PeakWindow", "PoissonArrivals", "TraceArrivals", "arrival_process",
+    "make_mmpp", "materialize", "per_ue", "RequestEvents", "TrafficRecorder",
+    "Trace", "from_process",
+]

@@ -1,0 +1,56 @@
+"""CLI for the traffic subsystem.
+
+  python -m repro.traffic --list           # generator + scenario catalogue
+  python -m repro.traffic --show trace.npz # inspect a saved trace
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def _list() -> None:
+    from . import processes
+    print("Arrival processes (repro.traffic.processes):")
+    for line in processes.describe().splitlines():
+        print(f"  {line}")
+    from ..core import scenarios as sc
+    traffic_names = [n for n in sc.names()
+                     if n in ("mmpp_burst", "diurnal", "flash_crowd",
+                              "trace_replay", "peak_window", "fixed_rate")]
+    print("\nTraffic-driven scenarios (repro.core.scenarios):")
+    for name in traffic_names:
+        doc = (sc._REGISTRY[name].__doc__ or "").strip().splitlines()
+        print(f"  {name}: {doc[0] if doc else ''}")
+    print("\nSee docs/traffic.md for the trace format and the "
+          "serving->trace->MEC replay walkthrough.")
+
+
+def _show(path: str) -> None:
+    from .trace import Trace
+    tr = Trace.load(path)
+    print(f"{path}: T={tr.n_slots} slots x N={tr.n_ue} UEs, "
+          f"slot_s={tr.slot_s:g}")
+    print(f"  mean rate {np.mean(tr.rates):.3f} req/s, "
+          f"peak {np.max(tr.rates):.3f} req/s")
+    print(f"  meta: {tr.meta}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.traffic",
+                                 description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print the generator/scenario catalogue")
+    ap.add_argument("--show", metavar="TRACE_NPZ",
+                    help="summarize a saved trace file")
+    args = ap.parse_args(argv)
+    if args.show:
+        _show(args.show)
+        return 0
+    _list()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,263 @@
+"""Stochastic arrival-process library: traffic models for the MEC environment.
+
+The paper's premise is *continuous AI task arrivals* (Sec. II serial queuing
+model); its simulations only exercise three synthetic rate modes.  This module
+turns the arrival rate into an extensible axis of scenario diversity: each
+process is a **registered-pytree dataclass** whose ``__call__(key, t)``
+returns the per-UE arrival-rate vector ``lam`` (req/s) for time slot ``t``.
+
+Design contract (what :func:`repro.core.env.step_p` relies on):
+
+* **Pure and jittable** -- ``__call__`` is a pure function of ``(key, t)``
+  and the process's own array leaves; no Python-level state.
+* **Pytree** -- all numeric attributes are array leaves, so a process rides
+  inside :class:`repro.core.env.MecParams`, ``jnp.stack``-s across B cells
+  (``repro.core.scenarios.stack_params``), vmaps over the cell axis, and
+  shards over the ``("cells",)`` mesh (``repro.core.gridshard``) exactly like
+  every other env constant.  Per-UE attributes are shaped ``(N,)`` so the
+  same definition broadcasts over UEs.
+* **Static type** -- the process *class* is part of the pytree treedef, so
+  every cell of one stacked grid must use the same process type (mirroring
+  the static ``edge_queueing`` flag).
+
+The MMPP's modulating Markov chain is materialized at construction
+(:func:`make_mmpp`) and stored as a ``(T, N)`` regime leaf indexed by
+``t % T``: the chain stays genuinely Markov (geometric dwell times, arbitrary
+transition matrix) while ``__call__`` stays a pure function of ``t`` --
+carrying the chain state through ``MecState`` would leak process internals
+into every consumer of the env.  :class:`TraceArrivals` replays a
+``(T, N)`` rate tensor the same way (see :mod:`repro.traffic.trace` for the
+on-disk format and :mod:`repro.traffic.recorder` for recording one from a
+live :class:`~repro.serving.engine.ServingEngine`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# name -> process class; the CLI catalogue (python -m repro.traffic --list)
+PROCESSES: dict[str, type] = {}
+
+
+def arrival_process(name: str):
+    """Class decorator: register a pytree arrival process under ``name``."""
+    def deco(cls):
+        cls = dataclasses.dataclass(frozen=True)(cls)
+        fields = [f.name for f in dataclasses.fields(cls)]
+        jax.tree_util.register_dataclass(cls, data_fields=fields,
+                                         meta_fields=[])
+        if name in PROCESSES:
+            raise ValueError(f"arrival process {name!r} already registered")
+        PROCESSES[name] = cls
+        cls.kind = name
+        return cls
+    return deco
+
+
+def _f32(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+def per_ue(x, n: int) -> jax.Array:
+    """Broadcast a scalar or (N,) array-like to a (N,) float32 leaf."""
+    a = np.broadcast_to(np.asarray(x, np.float32), (n,))
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic-in-t processes (key unused)
+# ---------------------------------------------------------------------------
+
+@arrival_process("fixed")
+class FixedRate:
+    """Constant per-UE rate (the paper's Fig. 4 sweep points)."""
+
+    lam: jax.Array          # (N,) req/s
+
+    def __call__(self, key, t) -> jax.Array:
+        del key, t
+        return self.lam
+
+
+@arrival_process("peak_window")
+class PeakWindow:
+    """Constant base rate + an additive peak inside [start, stop) (Fig. 5)."""
+
+    base: jax.Array         # (N,) req/s
+    boost: jax.Array        # 0-d, added req/s inside the window
+    start: jax.Array        # 0-d int32 slot
+    stop: jax.Array         # 0-d int32 slot
+
+    def __call__(self, key, t) -> jax.Array:
+        del key
+        in_peak = jnp.logical_and(t >= self.start, t < self.stop)
+        return self.base + jnp.where(in_peak, self.boost, 0.0)
+
+
+@arrival_process("diurnal")
+class Diurnal:
+    """Sinusoidal day/night load: lam = max(0, base + amp*sin(2pi(t+phase)/period))."""
+
+    base: jax.Array         # (N,) req/s
+    amp: jax.Array          # (N,) req/s swing
+    period: jax.Array       # 0-d, slots per cycle
+    phase: jax.Array        # 0-d, slot offset
+
+    def __call__(self, key, t) -> jax.Array:
+        del key
+        ang = 2.0 * jnp.pi * (t + self.phase) / self.period
+        return jnp.maximum(self.base + self.amp * jnp.sin(ang), 0.0)
+
+
+@arrival_process("flash_crowd")
+class FlashCrowd:
+    """Base load + a flash-crowd spike at t0 with exponential decay."""
+
+    base: jax.Array         # (N,) req/s
+    spike: jax.Array        # 0-d, peak added req/s at t0
+    t0: jax.Array           # 0-d int32, event slot
+    decay: jax.Array        # 0-d, e-folding time of the spike [slots]
+
+    def __call__(self, key, t) -> jax.Array:
+        del key
+        dt = jnp.maximum(t - self.t0, 0).astype(jnp.float32)
+        burst = self.spike * jnp.exp(-dt / self.decay)
+        return self.base + jnp.where(t >= self.t0, burst, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic processes (per-slot draws from ``key``)
+# ---------------------------------------------------------------------------
+
+@arrival_process("iid_uniform")
+class IidUniform:
+    """lam ~ U(low, high) iid per UE and slot (the paper's training default)."""
+
+    low: jax.Array          # (N,) req/s
+    high: jax.Array         # (N,) req/s
+
+    def __call__(self, key, t) -> jax.Array:
+        del t
+        return jax.random.uniform(key, self.low.shape, jnp.float32,
+                                  self.low, self.high)
+
+
+@arrival_process("poisson")
+class PoissonArrivals:
+    """Empirical rate of a Poisson arrival count: N_t ~ Pois(lam * slot_s).
+
+    Models discrete request counts (the serving tier's reality) rather than a
+    fluid rate: the per-slot empirical rate N_t / slot_s is integer-granular
+    and fluctuates around ``lam`` with variance lam / slot_s.
+    """
+
+    lam: jax.Array          # (N,) nominal req/s
+    slot_s: jax.Array       # 0-d, slot length in seconds
+
+    def __call__(self, key, t) -> jax.Array:
+        del t
+        counts = jax.random.poisson(key, self.lam * self.slot_s,
+                                    self.lam.shape)
+        return counts.astype(jnp.float32) / self.slot_s
+
+
+@arrival_process("mmpp")
+class MMPP:
+    """Markov-modulated (bursty) process: a K-state chain picks the rate.
+
+    ``regimes`` holds the pre-simulated modulating chains (one independent
+    chain per UE, wrapped at the horizon T); see :func:`make_mmpp`.
+    """
+
+    rates: jax.Array        # (K,) req/s per regime
+    regimes: jax.Array      # (T, N) int32 regime index per slot and UE
+
+    def __call__(self, key, t) -> jax.Array:
+        del key
+        horizon = self.regimes.shape[0]
+        reg = jax.lax.dynamic_index_in_dim(
+            self.regimes, jnp.mod(t, horizon), keepdims=False)
+        return self.rates[reg]
+
+
+@arrival_process("trace")
+class TraceArrivals:
+    """Replay a slot-indexed (T, N) rate tensor, wrapping at the horizon.
+
+    The replay half of the serving->trace->MEC loop: build one from a
+    :class:`repro.traffic.trace.Trace` (``trace.process()``), which in turn
+    can come from ``Trace.load`` or a :class:`~repro.traffic.recorder.
+    TrafficRecorder` attached to a live ServingEngine.
+    """
+
+    rates: jax.Array        # (T, N) req/s
+
+    def __call__(self, key, t) -> jax.Array:
+        del key
+        horizon = self.rates.shape[0]
+        return jax.lax.dynamic_index_in_dim(
+            self.rates, jnp.mod(t, horizon), keepdims=False)
+
+
+# ---------------------------------------------------------------------------
+# Constructors (host-side; deterministic in their seed)
+# ---------------------------------------------------------------------------
+
+def make_mmpp(n_ue: int, seed: int = 0, rates=(0.5, 3.0), p_stay: float = 0.92,
+              horizon: int = 400, trans: np.ndarray | None = None) -> MMPP:
+    """Simulate per-UE modulating Markov chains and wrap them in an MMPP.
+
+    ``p_stay`` builds the default transition matrix (stay with p_stay, else
+    jump uniformly to another regime -- geometric dwell ~ 1/(1-p_stay)
+    slots); pass ``trans`` (K, K, rows summing to 1) for arbitrary chains.
+    Deterministic in ``seed`` (numpy Philox on the host).
+    """
+    k = len(rates)
+    if trans is None:
+        if k == 1:
+            trans = np.ones((1, 1))
+        else:
+            off = (1.0 - p_stay) / (k - 1)
+            trans = np.full((k, k), off)
+            np.fill_diagonal(trans, p_stay)
+    trans = np.asarray(trans, np.float64)
+    if trans.shape != (k, k) or not np.allclose(trans.sum(1), 1.0):
+        raise ValueError(f"trans must be ({k},{k}) with rows summing to 1")
+    rng = np.random.default_rng(seed)
+    regimes = np.empty((horizon, n_ue), np.int32)
+    state = rng.integers(0, k, n_ue)
+    cdf = np.cumsum(trans, axis=1)
+    for t in range(horizon):
+        regimes[t] = state
+        u = rng.random(n_ue)
+        state = (u[:, None] > cdf[state]).sum(axis=1)
+    return MMPP(rates=_f32(rates), regimes=jnp.asarray(regimes))
+
+
+def materialize(process, horizon: int, key=None) -> np.ndarray:
+    """Evaluate a process over slots 0..horizon-1 -> (T, N) float32 rates.
+
+    Per-slot keys are ``fold_in(key, t)`` -- the same stream an env rollout
+    would not see (rollouts split from ``MecState.key``), so this is for
+    converting processes into traces, not for reproducing a rollout's draws.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def at(t):
+        return process(jax.random.fold_in(key, t), t)
+
+    rates = jax.vmap(at)(jnp.arange(horizon, dtype=jnp.int32))
+    return np.asarray(rates, np.float32)
+
+
+def describe() -> str:
+    """One line per registered process (the --list catalogue)."""
+    lines = []
+    for name in sorted(PROCESSES):
+        doc = (PROCESSES[name].__doc__ or "").strip().splitlines()
+        lines.append(f"{name}: {doc[0] if doc else ''}")
+    return "\n".join(lines)

@@ -1,0 +1,118 @@
+"""Traffic recorder: turn a live ServingEngine run into an arrival Trace.
+
+:class:`TrafficRecorder` is the observer half of the serving->trace->MEC
+loop.  Attach one to a :class:`~repro.serving.engine.ServingEngine`
+(``ServingEngine(..., recorder=rec)``) and the engine reports, in units of
+its own step clock (one ``step()`` == one tick):
+
+* ``record_submit(rid, t, ue)``   -- request entered the queue;
+* ``record_admit(rid, t)``        -- request prefilled into a decode slot;
+* ``record_complete(rid, t)``     -- request finished decoding.
+
+``to_trace`` then bins one of those event streams into the canonical
+slot-indexed ``(T, N)`` rate tensor (:class:`repro.traffic.trace.Trace`),
+which replays into the MEC environment as a
+:class:`~repro.traffic.processes.TraceArrivals` process.  The recorder is
+duck-typed -- the engine never imports this module -- so any object with the
+three ``record_*`` methods can stand in.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .trace import Trace
+
+
+@dataclasses.dataclass
+class RequestEvents:
+    """Lifecycle timestamps (engine ticks) of one request.
+
+    ``ue`` is the originating UE when the caller declared one
+    (``Request.ue``); None falls back to ``rid % n_ue`` round-robin at
+    trace-binning time.
+    """
+
+    rid: int
+    ue: int | None = None
+    submit: int | None = None
+    admit: int | None = None
+    complete: int | None = None
+
+    @property
+    def queueing_ticks(self) -> int | None:
+        if self.submit is None or self.admit is None:
+            return None
+        return self.admit - self.submit
+
+    @property
+    def service_ticks(self) -> int | None:
+        if self.admit is None or self.complete is None:
+            return None
+        return self.complete - self.admit
+
+
+class TrafficRecorder:
+    """Collects per-request lifecycle events and bins them into a Trace."""
+
+    def __init__(self):
+        self.events: dict[int, RequestEvents] = {}
+
+    # -- engine-facing hooks -------------------------------------------------
+
+    def record_submit(self, rid: int, t: int, ue: int | None = None) -> None:
+        ev = self.events.setdefault(rid, RequestEvents(rid=rid, ue=ue))
+        ev.ue = ue
+        ev.submit = t
+
+    def record_admit(self, rid: int, t: int) -> None:
+        self.events.setdefault(rid, RequestEvents(rid=rid)).admit = t
+
+    def record_complete(self, rid: int, t: int) -> None:
+        self.events.setdefault(rid, RequestEvents(rid=rid)).complete = t
+
+    # -- analysis ------------------------------------------------------------
+
+    def timestamps(self, which: str = "submit") -> list[tuple[int, int]]:
+        """(tick, rid) pairs of the chosen event, in rid order; unseen events
+        are skipped (e.g. requests still in flight have no ``complete``)."""
+        if which not in ("submit", "admit", "complete"):
+            raise ValueError(f"unknown event {which!r}")
+        out = []
+        for rid in sorted(self.events):
+            t = getattr(self.events[rid], which)
+            if t is not None:
+                out.append((int(t), rid))
+        return out
+
+    def to_trace(self, n_ue: int, *, bin_ticks: int = 1, slot_s: float = 1.0,
+                 which: str = "submit", horizon: int | None = None) -> Trace:
+        """Bin events into a (T, N) rate trace.
+
+        One trace slot aggregates ``bin_ticks`` engine ticks and spans
+        ``slot_s`` seconds of MEC time, so ``rate = count / slot_s`` req/s.
+        Requests that declared no ``ue`` spread round-robin (``rid %
+        n_ue``); a declared ``ue >= n_ue`` folds onto ``ue % n_ue``.
+        ``horizon`` pads/truncates to a fixed slot count (replay wraps, so
+        padding with zero-rate slots models an idle tail).
+        """
+        if bin_ticks < 1:
+            raise ValueError("bin_ticks must be >= 1")
+        stamps = self.timestamps(which)
+        if not stamps and horizon is None:
+            raise ValueError(f"no {which!r} events recorded")
+        last = max((t for t, _ in stamps), default=0)
+        n_slots = horizon if horizon is not None else last // bin_ticks + 1
+        counts = np.zeros((n_slots, n_ue), np.float32)
+        for t, rid in stamps:
+            ue = self.events[rid].ue
+            if ue is None:
+                ue = rid
+            slot = t // bin_ticks
+            if slot < n_slots:
+                counts[slot, ue % n_ue] += 1.0
+        return Trace(rates=counts / np.float32(slot_s), slot_s=slot_s,
+                     meta={"source": "serving_recorder", "event": which,
+                           "bin_ticks": int(bin_ticks),
+                           "n_requests": len(self.events)})

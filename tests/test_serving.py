@@ -92,10 +92,8 @@ def test_run_until_idle_returns_completed(setup):
 
 
 def test_engine_batch_matches_solo_equal_lengths(setup):
-    """Equal-length prompts need no padding, so the batched prefill path is
-    exact: each request's greedy tokens equal a solo (slots=1) run of the
-    same prompt.  (Mixed lengths are approximate -- see the engine module
-    docstring: left-pad positions are attended and shift RoPE.)"""
+    """Equal-length prompts involve no ragged padding: each request's greedy
+    tokens equal a solo (slots=1) run of the same prompt."""
     cfg, params = setup
     rng = np.random.default_rng(5)
     prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)
@@ -115,21 +113,89 @@ def test_engine_batch_matches_solo_equal_lengths(setup):
         assert r.out == solo.out
 
 
-def test_engine_mixed_lengths_complete(setup):
-    """Mixed-length batches still run to completion (the engine pads and
-    serves them; only token-level exactness is out of scope)."""
+def test_engine_mixed_lengths_match_solo(setup):
+    """Mixed-length batches are EXACT: the pad counts flow into
+    transformer.prefill as an attention mask + RoPE position shift, so each
+    padded row's greedy tokens equal its solo run (the left-pad limitation
+    the engine used to document is gone)."""
     cfg, params = setup
     rng = np.random.default_rng(9)
-    eng = ServingEngine(cfg, params, slots=2, s_max=64)
-    reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab, 5)
-                    .astype(np.int32), max_new=3),
-            Request(rid=1, prompt=rng.integers(0, cfg.vocab, 9)
-                    .astype(np.int32), max_new=3)]
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 9, 12)]
+    eng = ServingEngine(cfg, params, slots=3, s_max=64)
+    reqs = [Request(rid=i, prompt=p, max_new=4)
+            for i, p in enumerate(prompts)]
     for r in reqs:
         eng.submit(r)
     finished = eng.run_until_idle()
-    assert len(finished) == 2
-    assert all(r.done and len(r.out) == 3 for r in reqs)
+    assert len(finished) == 3
+    for p, r in zip(prompts, reqs):
+        solo_eng = ServingEngine(cfg, params, slots=1, s_max=64)
+        solo = Request(rid=0, prompt=p, max_new=4)
+        solo_eng.submit(solo)
+        solo_eng.run_until_idle()
+        assert r.out == solo.out, f"prompt len {len(p)}"
+
+
+def test_prefill_bucketing_avoids_recompiles(setup):
+    """Steady-state serving must not churn the prefill jit cache: admitted
+    batches pad to power-of-two width buckets, so every prompt-length mix
+    inside one bucket shares one compiled shape."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=2, s_max=64)
+    rng = np.random.default_rng(3)
+    # 4 admission waves x mixed lengths 9..15 -> all land in the 16 bucket
+    # (always ragged: lengths stay below the bucket width)
+    for wave in range(4):
+        for i in range(2):
+            n = int(rng.integers(9, 16))
+            eng.submit(Request(rid=wave * 2 + i,
+                               prompt=rng.integers(0, cfg.vocab, n)
+                               .astype(np.int32), max_new=2))
+        eng.run_until_idle()
+    assert eng.prefill_compiles == 1
+    assert eng._prefill_shapes == {(2, 16, True)}
+    # a longer prompt moves to the next bucket: exactly one more compile
+    eng.submit(Request(rid=99, prompt=rng.integers(0, cfg.vocab, 20)
+                       .astype(np.int32), max_new=2))
+    eng.run_until_idle()
+    assert eng.prefill_compiles == 2
+    # a pad-free batch (prompts exactly bucket-width) takes the maskless
+    # kernel path: same width, separate signature
+    for i in range(2):
+        eng.submit(Request(rid=200 + i,
+                           prompt=rng.integers(0, cfg.vocab, 16)
+                           .astype(np.int32), max_new=2))
+    eng.run_until_idle()
+    assert (2, 16, False) in eng._prefill_shapes
+
+
+def test_bucket_respects_decode_budget(setup):
+    """Bucket slack must never eat the KV decode budget: with s_max=24 a
+    13-token prompt cannot round up to the 16 bucket when max_new=10
+    (16 + 10 > 24) -- the engine falls back to the exact width and the
+    request still matches its solo run; a genuinely oversized request
+    raises instead of silently clamping cache writes."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 13).astype(np.int32)
+    eng = ServingEngine(cfg, params, slots=1, s_max=24)
+    req = Request(rid=0, prompt=prompt, max_new=10)
+    eng.submit(req)
+    eng.run_until_idle()
+    assert len(req.out) == 10
+    assert eng._prefill_shapes == {(1, 13, False)}   # exact-width fallback
+    solo = ServingEngine(cfg, params, slots=1, s_max=64)
+    ref = Request(rid=0, prompt=prompt, max_new=10)
+    solo.submit(ref)
+    solo.run_until_idle()
+    assert req.out == ref.out
+    # prompt + decode budget > s_max: loud failure, not silent corruption
+    eng2 = ServingEngine(cfg, params, slots=1, s_max=24)
+    eng2.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab, 20)
+                        .astype(np.int32), max_new=10))
+    with pytest.raises(ValueError, match="exceeds s_max"):
+        eng2.run_until_idle()
 
 
 @pytest.mark.slow

@@ -1,0 +1,346 @@
+"""Traffic subsystem: generators, trace format, recorder, and the
+serving->trace->MEC replay loop (repro.traffic + LAM_TRACE integration).
+
+The batched/sharded parity tests mirror tests/test_gridshard.py: trace-driven
+grids must match the per-cell loop to 1e-5, including an uneven
+B-not-multiple-of-devices sharded case.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import traffic
+from repro.core import gridshard
+from repro.core import scenarios as sc
+from repro.core.env import (LAM_TRACE, MecConfig, make_params, reset_p,
+                            step_p)
+from repro.core.lymdo import run_fixed_batched
+from repro.launch.mesh import make_cells_mesh
+
+N_DEV = len(jax.devices())
+_STEP = jax.jit(step_p)
+
+
+def _cell(tree, b):
+    return jax.tree.map(lambda x: x[b], tree)
+
+
+def _forced_pad_to(b: int) -> int | None:
+    natural = -(-b // N_DEV) * N_DEV
+    return natural + N_DEV if natural == b else None
+
+
+# ---------------------------------------------------------------------------
+# Generators: empirical rates match nominal rates
+# ---------------------------------------------------------------------------
+
+def _empirical_mean(proc, horizon=2000, seed=0):
+    rates = traffic.materialize(proc, horizon, jax.random.PRNGKey(seed))
+    return rates.mean(axis=0)
+
+
+def test_iid_uniform_mean():
+    p = traffic.IidUniform(low=traffic.per_ue(0.5, 3),
+                           high=traffic.per_ue(2.5, 3))
+    np.testing.assert_allclose(_empirical_mean(p), 1.5, atol=0.05)
+
+
+def test_poisson_mean_and_granularity():
+    lam = np.array([0.8, 2.0, 4.0], np.float32)
+    p = traffic.PoissonArrivals(lam=jnp.asarray(lam),
+                                slot_s=jnp.float32(1.0))
+    np.testing.assert_allclose(_empirical_mean(p), lam, rtol=0.1)
+    # counts per 1s slot are integers -> rates are integer-valued
+    rates = traffic.materialize(p, 50, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(rates, np.round(rates))
+
+
+def test_diurnal_mean_and_swing():
+    p = traffic.Diurnal(base=traffic.per_ue(1.5, 2),
+                        amp=traffic.per_ue(1.0, 2),
+                        period=jnp.float32(100.0), phase=jnp.float32(0.0))
+    rates = traffic.materialize(p, 400)      # 4 whole periods
+    np.testing.assert_allclose(rates.mean(axis=0), 1.5, atol=1e-3)
+    np.testing.assert_allclose(rates.max(axis=0), 2.5, atol=1e-3)
+    np.testing.assert_allclose(rates.min(axis=0), 0.5, atol=1e-3)
+
+
+def test_flash_crowd_shape():
+    p = traffic.FlashCrowd(base=traffic.per_ue(1.0, 2),
+                           spike=jnp.float32(3.0), t0=jnp.int32(50),
+                           decay=jnp.float32(10.0))
+    rates = traffic.materialize(p, 120)
+    np.testing.assert_allclose(rates[:50], 1.0)          # quiet before t0
+    np.testing.assert_allclose(rates[50], 4.0, rtol=1e-6)  # base + spike
+    assert rates[60, 0] < rates[50, 0]                   # decaying
+    np.testing.assert_allclose(rates[110], 1.0, atol=0.02)  # ~6 e-foldings
+
+
+def test_mmpp_rates_and_dwell():
+    """Regime rates are drawn from the declared set; long-run occupancy of a
+    symmetric 2-state chain is ~50/50; mean dwell ~ 1/(1-p_stay)."""
+    p = traffic.make_mmpp(4, seed=0, rates=(0.5, 3.0), p_stay=0.9,
+                          horizon=4000)
+    rates = traffic.materialize(p, 4000)
+    assert set(np.unique(rates)) <= {np.float32(0.5), np.float32(3.0)}
+    frac_high = (rates == 3.0).mean()
+    assert 0.4 < frac_high < 0.6
+    switches = (np.diff(np.asarray(p.regimes), axis=0) != 0).mean()
+    np.testing.assert_allclose(switches, 0.1, atol=0.03)  # 1 - p_stay
+    # deterministic in seed, distinct across seeds
+    p2 = traffic.make_mmpp(4, seed=0, rates=(0.5, 3.0), p_stay=0.9,
+                           horizon=4000)
+    np.testing.assert_array_equal(np.asarray(p.regimes),
+                                  np.asarray(p2.regimes))
+    p3 = traffic.make_mmpp(4, seed=1, rates=(0.5, 3.0), p_stay=0.9,
+                           horizon=4000)
+    assert not np.array_equal(np.asarray(p.regimes), np.asarray(p3.regimes))
+
+
+def test_mmpp_rejects_bad_transition_matrix():
+    with pytest.raises(ValueError):
+        traffic.make_mmpp(2, trans=np.array([[0.5, 0.4], [0.5, 0.5]]))
+
+
+# ---------------------------------------------------------------------------
+# Trace format: save -> load -> replay round-trips bit-exactly
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip_bit_exact(tmp_path):
+    rng = np.random.default_rng(7)
+    rates = rng.uniform(0.0, 3.0, (37, 5)).astype(np.float32)
+    tr = traffic.Trace(rates=rates, slot_s=0.25, meta={"source": "test"})
+    path = tmp_path / "trace.npz"
+    tr.save(path)
+    tr2 = traffic.Trace.load(path)
+    assert tr2.rates.dtype == np.float32
+    np.testing.assert_array_equal(tr2.rates, rates)      # bit-exact
+    assert tr2.slot_s == 0.25 and tr2.meta == {"source": "test"}
+    # replay through the process is also bit-exact (and wraps at T)
+    proc = tr2.process()
+    for t in (0, 11, 36, 37, 80):
+        np.testing.assert_array_equal(
+            np.asarray(proc(None, jnp.int32(t))), rates[t % 37])
+
+
+def test_trace_validation_and_shift():
+    with pytest.raises(ValueError):
+        traffic.Trace(rates=np.zeros((5,), np.float32))
+    tr = traffic.Trace(rates=np.arange(12, dtype=np.float32).reshape(6, 2))
+    sh = tr.shifted(2)
+    np.testing.assert_array_equal(sh.rates, np.roll(tr.rates, -2, axis=0))
+    assert sh.meta["shifted_by"] == 2
+
+
+def test_from_process_materializes():
+    p = traffic.FixedRate(lam=traffic.per_ue(1.25, 3))
+    tr = traffic.from_process(p, horizon=9)
+    assert tr.rates.shape == (9, 3)
+    np.testing.assert_allclose(tr.rates, 1.25)
+    assert tr.meta["source"] == "process:fixed"
+
+
+# ---------------------------------------------------------------------------
+# Recorder: request lifecycles -> binned trace
+# ---------------------------------------------------------------------------
+
+def test_recorder_bins_submissions():
+    rec = traffic.TrafficRecorder()
+    # 2 UEs; submits at ticks 0,0,1,4,4,4; one still-in-flight request
+    for rid, (t, ue) in enumerate([(0, 0), (0, 1), (1, 0), (4, 1), (4, 1),
+                                   (4, 0)]):
+        rec.record_submit(rid, t, ue=ue)
+        rec.record_admit(rid, t + 1)
+        if rid != 5:
+            rec.record_complete(rid, t + 3)
+    tr = rec.to_trace(n_ue=2, bin_ticks=1, slot_s=0.5)
+    assert tr.rates.shape == (5, 2)
+    np.testing.assert_array_equal(tr.rates[:, 0] * 0.5, [1, 1, 0, 0, 1])
+    np.testing.assert_array_equal(tr.rates[:, 1] * 0.5, [1, 0, 0, 0, 2])
+    # completions bin separately; the in-flight rid=5 is skipped
+    tr_c = rec.to_trace(n_ue=2, which="complete", horizon=8)
+    assert tr_c.rates.sum() == 5
+    ev = rec.events[0]
+    assert ev.queueing_ticks == 1 and ev.service_ticks == 2
+    with pytest.raises(ValueError):
+        rec.to_trace(n_ue=2, which="nope")
+
+
+def test_recorder_round_robin_when_ue_unset():
+    """Requests that never declared a UE spread rid % n_ue instead of all
+    landing on column 0."""
+    rec = traffic.TrafficRecorder()
+    for rid in range(6):
+        rec.record_submit(rid, rid)          # no ue argument
+    tr = rec.to_trace(n_ue=3, horizon=6)
+    np.testing.assert_allclose(tr.rates.sum(axis=0), [2, 2, 2])
+
+
+def test_recorder_horizon_and_binning():
+    rec = traffic.TrafficRecorder()
+    for rid, t in enumerate([0, 3, 5, 9, 11]):
+        rec.record_submit(rid, t, ue=rid % 3)
+    tr = rec.to_trace(n_ue=3, bin_ticks=4, slot_s=2.0, horizon=3)
+    assert tr.rates.shape == (3, 3)
+    # bin 0 holds ticks 0-3 (2 events), bin 1 ticks 4-7 (1), bin 2 ticks 8-11 (2)
+    np.testing.assert_allclose(tr.rates.sum(axis=1) * 2.0, [2, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Env integration: the arrival process drives state.lam
+# ---------------------------------------------------------------------------
+
+def _tiny_params(arrival=None, cfg=None):
+    from repro.profiling.convnets import alexnet_profile
+    profiles = [alexnet_profile()] * 2
+    return make_params(profiles, cfg or MecConfig(), [0.04, 0.04],
+                       [0.1, 0.1], arrival=arrival)
+
+
+def test_trace_arrival_drives_env_lam():
+    rates = np.arange(8, dtype=np.float32).reshape(4, 2) * 0.3 + 0.5
+    p = _tiny_params(arrival=traffic.Trace(rates=rates).process())
+    st = reset_p(p, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(st.lam), rates[0], rtol=1e-6)
+    for t in range(1, 6):
+        st, _ = _STEP(p, st, jnp.zeros((2,), jnp.int32))
+        np.testing.assert_allclose(np.asarray(st.lam), rates[t % 4],
+                                   rtol=1e-6)
+
+
+def test_lam_trace_mode_requires_process():
+    with pytest.raises(ValueError):
+        _tiny_params(cfg=MecConfig(lam_mode=LAM_TRACE))
+
+
+def test_cfg_arrival_field_is_used():
+    arr = traffic.FixedRate(lam=traffic.per_ue(1.75, 2))
+    p = _tiny_params(cfg=MecConfig(arrival=arr))
+    st = reset_p(p, jax.random.PRNGKey(3))
+    np.testing.assert_allclose(np.asarray(st.lam), 1.75)
+
+
+def test_stack_params_rejects_mixed_arrival_types():
+    pa = _tiny_params(arrival=traffic.FixedRate(lam=traffic.per_ue(1.0, 2)))
+    pb = _tiny_params(arrival=traffic.Diurnal(
+        base=traffic.per_ue(1.0, 2), amp=traffic.per_ue(0.5, 2),
+        period=jnp.float32(50.0), phase=jnp.float32(0.0)))
+    with pytest.raises(ValueError, match="arrival-process type"):
+        sc.stack_params([pa, pb])
+
+
+# ---------------------------------------------------------------------------
+# Batched / sharded replay parity (the 1e-5 contract, LAM_TRACE edition)
+# ---------------------------------------------------------------------------
+
+def _trace_cells(b: int, n_ue: int = 4, horizon: int = 24, seed: int = 5):
+    mm = traffic.make_mmpp(n_ue, seed=seed, rates=(0.5, 2.5), horizon=horizon)
+    tr = traffic.from_process(mm, horizon)
+    return [sc.make("trace_replay", trace=tr, offset=3 * i, seed=seed + i)
+            for i in range(b)]
+
+
+def test_trace_grid_batched_equals_per_cell_loop():
+    """LAM_TRACE ScenarioGrid rollout == per-cell loop to 1e-5 (full
+    results), using the rollout's own key discipline."""
+    grid = sc.ScenarioGrid(_trace_cells(4))
+    steps, seed = 10, 3
+    _, res_b, sum_b = grid.rollout("oracle", steps=steps, seed=seed)
+
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    cell_keys = gridshard.cell_keys(k0, grid.b)
+    for b in range(grid.b):
+        params = _cell(grid.params, b)
+        st = reset_p(params, cell_keys[b])
+        rewards = []
+        for t in range(steps):
+            from repro.core import sweep
+            st, res = _STEP(params, st, sweep.oracle_cut_p(params, st))
+            rewards.append(float(res.reward))
+            np.testing.assert_allclose(
+                np.asarray(res_b.reward[t, b]), rewards[-1],
+                rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(sum_b["reward"][b]),
+                                   np.mean(rewards), rtol=1e-5, atol=1e-7)
+
+
+def test_trace_grid_sharded_parity_uneven_b():
+    """Sharded trace replay at B not a multiple of the device count: padded
+    (B, T, N) trace tensors must not perturb real cells."""
+    b = 6
+    cells = _trace_cells(b)
+    plain = sc.ScenarioGrid(cells)
+    shard = sc.ScenarioGrid(cells).use_mesh(make_cells_mesh(),
+                                            pad_to=_forced_pad_to(b))
+    assert shard.gridshard.pad > 0
+    _, res_p, sum_p = plain.rollout("oracle", steps=8, seed=11)
+    _, res_s, sum_s = shard.rollout("oracle", steps=8, seed=11)
+    for name in sum_p:
+        np.testing.assert_allclose(np.asarray(sum_s[name]),
+                                   np.asarray(sum_p[name]),
+                                   rtol=1e-5, atol=1e-7, err_msg=name)
+    for got, want in zip(jax.tree.leaves(res_s), jax.tree.leaves(res_p)):
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_mmpp_and_diurnal_grids_run():
+    grid = sc.ScenarioGrid([sc.make("mmpp_burst", seed=i) for i in range(2)]
+                           + [])
+    m, _ = run_fixed_batched(grid, "local", episodes=1, steps=6)
+    assert np.all(np.isfinite(m["delay"]))
+    grid2 = sc.ScenarioGrid([sc.make("diurnal", base=1.0 + 0.2 * i)
+                             for i in range(2)])
+    m2, _ = run_fixed_batched(grid2, "oracle", episodes=1, steps=6)
+    assert np.all(np.isfinite(m2["reward"]))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: ServingEngine -> recorder -> trace -> MEC grid replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serving_trace_replay_end_to_end(tmp_path):
+    """The full loop: serve prompts under a bursty schedule, record the
+    lifecycle, bin it into a trace, save/load it, and replay it as the
+    arrival process of a batched multi-cell rollout."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import transformer
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=4)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rec = traffic.TrafficRecorder()
+    eng = ServingEngine(cfg, params, slots=2, s_max=32, recorder=rec)
+
+    rng = np.random.default_rng(0)
+    schedule = {0: 2, 3: 1, 7: 3, 12: 2}      # tick -> submissions
+    rid = 0
+    for tick in range(20):
+        for _ in range(schedule.get(tick, 0)):
+            eng.submit(Request(rid=rid,
+                               prompt=rng.integers(0, cfg.vocab, 6)
+                               .astype(np.int32),
+                               max_new=2, ue=rid % 3))
+            rid += 1
+        eng.step()
+    eng.run_until_idle()
+    assert len(rec.events) == rid
+    assert all(ev.complete is not None for ev in rec.events.values())
+
+    tr = rec.to_trace(n_ue=3, bin_ticks=2, slot_s=1.0, horizon=12)
+    assert tr.rates.sum() == rid              # every submission binned
+    path = tmp_path / "serving.npz"
+    tr.save(path)
+
+    cells = [sc.make("trace_replay", path=str(path), offset=i, seed=i)
+             for i in range(3)]
+    grid = sc.ScenarioGrid(cells)
+    m, res = run_fixed_batched(grid, "oracle", episodes=1, steps=12)
+    assert res.reward.shape == (12, 3)
+    assert np.all(np.isfinite(m["reward"]))
