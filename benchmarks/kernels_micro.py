@@ -43,6 +43,33 @@ def bench_all():
     rows.append(("decode_attention_1k", us,
                  f"{(k.size+v.size)*4/us/1e3:.1f}GB/s_cache_read"))
 
+    # ragged flash at engine bucket widths: masked-Pallas (interpret; the
+    # kernel body the TPU runs) vs the dense reference that used to serve
+    # every ragged batch.  Wall times are CPU-interpreter-skewed -- the
+    # point of the leg is exercising the masked kernel at serving shapes
+    # and recording the dense-fallback cost it replaces.
+    from repro.kernels.flash_attention import flash_attention_pallas
+    bw = 64                                   # engine bucket width
+    ks = jax.random.split(key, 4)
+    qb = jax.random.normal(ks[0], (4, bw, h, hd), jnp.float32)
+    kb = jax.random.normal(ks[1], (4, bw, kv, hd), jnp.float32)
+    vb = jax.random.normal(ks[2], (4, bw, kv, hd), jnp.float32)
+    pad = jnp.asarray([0, 11, 23, 40], jnp.int32)
+    pad_mask = jnp.arange(bw)[None, :] >= pad[:, None]
+    fm = jax.jit(lambda q, k, v, p: flash_attention_pallas(
+        q, k, v, kind="causal", q_block=32, k_block=32, pad=p,
+        interpret=True))
+    us = _time(fm, qb, kb, vb, pad, iters=3)
+    rows.append((f"ragged_flash_masked_b{bw}", us, "pallas_interpret"))
+
+    def dense_ragged(q, k, v):
+        mask = (jnp.broadcast_to(pad_mask[:, None, :], (4, bw, bw))
+                & ref.build_mask("causal", bw, bw)[None])
+        return ref.attention_ref(q, k, v, mask=mask)
+
+    us = _time(jax.jit(dense_ragged), qb, kb, vb)
+    rows.append((f"ragged_flash_dense_ref_b{bw}", us, "old_fallback"))
+
     # SSD scan
     bs, ss, hh, pp, nn = 2, 512, 8, 64, 64
     ks = jax.random.split(key, 4)

@@ -45,13 +45,21 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     """GQA attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd).
     kind: "causal" | "local" (sliding window) | "full".
 
-    ``pad_mask`` (B, Sk) bool marks VALID key positions per row (False =
-    left-pad filler): the serving engine's ragged prompt batches.  The
-    ragged path runs the dense reference with the combined causal+pad mask
-    -- prefill widths are engine-bucket sized, so the dense score tile is
-    small; the Pallas kernel has no ragged-batch support yet.
+    ``pad_mask`` (B, Sk) bool marks VALID key positions per row, False =
+    LEFT-pad filler (contiguous from position 0: the serving engine's ragged
+    prompt batches).  With Pallas active the mask folds into the flash
+    kernel as a per-row pad-count vector (``k_pos >= pad[b]``), keeping the
+    blocked path; otherwise the dense reference runs with the combined
+    causal+pad mask.  Sequence lengths need not be block multiples -- the
+    Pallas wrapper pads to the tile grid internally.
     """
     if pad_mask is not None:
+        if _pallas_active():
+            from .flash_attention import flash_attention_pallas
+            # left-contiguous pads by construction -> a count per row
+            pad = jnp.sum(~pad_mask, axis=1).astype(jnp.int32)
+            return flash_attention_pallas(q, k, v, kind=kind, window=window,
+                                          pad=pad, interpret=_INTERPRET)
         sq, sk = q.shape[1], k.shape[1]
         base = ref.build_mask(kind, sq, sk, window)     # (Sq, Sk) or None
         mask = jnp.broadcast_to(pad_mask[:, None, :],
@@ -80,22 +88,42 @@ def decode_attention(q, k, v, valid_mask):
     return ref.decode_attention_ref(q, k, v, valid_mask=valid_mask)
 
 
-def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int):
+def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int, reset=None):
     """Mamba2 SSD. x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,G,N).
-    Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    ``reset`` (B,S) bool zeroes the carried state entering flagged steps
+    (ragged serving batches; threaded to both dispatch arms).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+
+    S need not be a chunk multiple: the tail is right-padded with dt=0
+    steps (decay exp(a*0)=1 and contribution dt*b*x = 0, so the final state
+    is untouched) and the padded y rows are sliced off.
+    """
+    s = x.shape[1]
+    tail = (-s) % chunk
+    if tail:
+        pad_s = lambda t: jnp.pad(t, [(0, 0), (0, tail)]
+                                  + [(0, 0)] * (t.ndim - 2))
+        x, dt, b, c = pad_s(x), pad_s(dt), pad_s(b), pad_s(c)
+        if reset is not None:
+            reset = pad_s(reset)
     if _pallas_active():
         from .ssd_scan import ssd_scan_pallas
-        return ssd_scan_pallas(x, dt, a_log, b, c, d_skip, chunk=chunk,
-                               interpret=_INTERPRET)
-    return ref.ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk=chunk)
+        y, state = ssd_scan_pallas(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                                   reset=reset, interpret=_INTERPRET)
+    else:
+        y, state = ref.ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                                    reset=reset)
+    return (y[:, :s] if tail else y), state
 
 
 def rglru_scan(x, a, reset=None):
-    """Gated linear recurrence h_t = a_t * h_{t-1} + x_t.  x, a: (B,S,R)."""
+    """Gated linear recurrence h_t = a_t * h_{t-1} + x_t.  x, a: (B,S,R).
+    ``reset`` (B,S) bool zeroes the carried state entering flagged steps
+    (h_t = x_t there); threaded to both dispatch arms."""
     if _pallas_active():
         from .rglru_scan import rglru_scan_pallas
-        return rglru_scan_pallas(x, a, interpret=_INTERPRET)
-    return ref.rglru_scan_ref(x, a)
+        return rglru_scan_pallas(x, a, reset=reset, interpret=_INTERPRET)
+    return ref.rglru_scan_ref(x, a, reset=reset)
 
 
 def partition_sweep(macs, params_b, acts, psi, L, lam, gain, q_energy,

@@ -134,7 +134,7 @@ def decode_attention_ref(q, k, v, valid_mask):
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
-def ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk: int):
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk: int, reset=None):
     """Mamba2 SSD (state-space dual) reference, chunked scan.
 
     x:  (B, S, H, P)   inputs per head
@@ -142,11 +142,21 @@ def ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk: int):
     a_log: (H,)        log decay rate (A = -exp(a_log))
     b, c: (B, S, G, N) input/output projections (G groups broadcast to H)
     d_skip: (H,)       skip connection
+    reset: (B, S) bool, optional -- True zeroes the state ENTERING step t
+           (t's own contribution survives); left-padded serving rows pass
+           pad positions + the first real token here so pad garbage can
+           never reach real positions.
     Returns (y (B, S, H, P), final_state (B, H, N, P) fp32).
 
     Semantics (per head h, state M in R^{N x P}):
-        M_t = exp(A_h dt_t) M_{t-1} + dt_t b_t x_t^T
+        M_t = [reset_t ? 0 : exp(A_h dt_t) M_{t-1}] + dt_t b_t x_t^T
         y_t = c_t M_t + D_h x_t
+
+    Reset handling stays in the LINEAR domain (segment-id masks), never the
+    log domain: cumsum'ing a -inf/-1e30 log-decay would absorb every later
+    within-segment decay term (catastrophic cancellation), so instead the
+    decay table is masked to same-segment (q, r) pairs and the inter-chunk /
+    boundary terms are gated on "no reset since" indicators.
     """
     bsz, s, h, p = x.shape
     g, n = b.shape[2], b.shape[3]
@@ -170,39 +180,63 @@ def ssd_scan_ref(x, dt, a_log, b, c, d_skip, chunk: int):
     cum = jnp.cumsum(lac, axis=2)                    # (B,C,Q,H)
     total = cum[:, :, -1]                            # (B,C,H)
 
+    if reset is None:
+        same_seg = to_end_ok = no_reset_yet = chunk_clear = None
+    else:
+        # within-chunk segment ids: seg[q] = #resets at positions <= q
+        resetc = reset.reshape(bsz, nchunks, chunk).astype(jnp.int32)
+        seg = jnp.cumsum(resetc, axis=2)                       # (B,C,Q)
+        same_seg = seg[:, :, :, None] == seg[:, :, None, :]    # (B,C,Q,R): no
+        #   reset in (r, q] -- token r's state survives to token q
+        to_end_ok = seg == seg[:, :, -1:]          # no reset after r in chunk
+        no_reset_yet = seg == 0                    # carried state alive at q
+        chunk_clear = (seg[:, :, -1] == 0)         # (B,C) state crosses chunk
+
     # intra-chunk (triangular) term: y_intra[q] = sum_{r<=q} decay(q,r) *
     #   (c_q . b_r) dt_r x_r   with decay(q,r) = exp(cum_q - cum_r).
-    # The causal mask is applied in LOG domain: for r > q the exponent is
-    # positive and exp() overflows to inf before a post-hoc mask could zero
-    # it (inf * 0 = NaN).
+    # The causal (and same-segment) mask is applied in LOG domain: for r > q
+    # the exponent is positive and exp() overflows to inf before a post-hoc
+    # mask could zero it (inf * 0 = NaN).
     scores = jnp.einsum("bcqhn,bcrhn->bchqr", cc, bc)
     ldecay = (cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
               - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
-    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
-    ldecay = jnp.where(tri[None, None, None], ldecay, -jnp.inf)
+    keep = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, None]
+    if same_seg is not None:
+        keep = keep & same_seg[:, :, None]           # (B,C,1|H,Q,R)
+    ldecay = jnp.where(keep, ldecay, -jnp.inf)
     w = scores * jnp.exp(ldecay)
     y_intra = jnp.einsum("bchqr,bcrh,bcrhp->bcqhp", w, dtc, xc)
 
     # chunk-boundary states: S_c = sum_r exp(total - cum_r) dt_r b_r x_r^T
     decay_to_end = jnp.exp(total[:, :, None, :] - cum)        # (B,C,Q,H)
+    if to_end_ok is not None:                # r crosses a reset -> dropped
+        decay_to_end = decay_to_end * to_end_ok[..., None]
     contrib = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchnp",
                          decay_to_end, dtc, bc, xc)
 
+    chunk_gate = (jnp.ones((bsz, nchunks), jnp.float32) if chunk_clear is None
+                  else chunk_clear.astype(jnp.float32))
+
     def scan_fn(m_prev, inp):
-        contrib_c, total_c = inp
+        contrib_c, total_c, gate_c = inp
         m_in = m_prev
-        m_out = m_in * jnp.exp(total_c)[..., None, None] + contrib_c
+        m_out = (m_in * jnp.exp(total_c)[..., None, None]
+                 * gate_c[:, None, None, None] + contrib_c)
         return m_out, m_in
 
     m0 = jnp.zeros((bsz, h, n, p), jnp.float32)
     contrib_t = contrib.transpose(1, 0, 2, 3, 4)     # (C,B,H,N,P)
     total_t = total.transpose(1, 0, 2)               # (C,B,H)
-    m_final, m_starts = jax.lax.scan(scan_fn, m0, (contrib_t, total_t))
+    m_final, m_starts = jax.lax.scan(
+        scan_fn, m0, (contrib_t, total_t, chunk_gate.T))
     m_starts = m_starts.transpose(1, 0, 2, 3, 4)     # (B,C,H,N,P) state at chunk start
 
     # inter-chunk term: y_inter[q] = exp(cum_q) c_q . M_start
+    inter_decay = jnp.exp(cum)
+    if no_reset_yet is not None:             # a reset at <= q kills M_start
+        inter_decay = inter_decay * no_reset_yet[..., None]
     y_inter = jnp.einsum("bcqh,bcqhn,bchnp->bcqhp",
-                         jnp.exp(cum), cc, m_starts)
+                         inter_decay, cc, m_starts)
 
     y = (y_intra + y_inter).reshape(bsz, s, h, p)
     y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
@@ -230,10 +264,14 @@ def ssd_step_ref(state, x_t, dt_t, a_log, b_t, c_t, d_skip):
     return y.astype(x_t.dtype), new_state
 
 
-def rglru_scan_ref(x, a):
+def rglru_scan_ref(x, a, reset=None):
     """Linear recurrence h_t = a_t * h_{t-1} + x_t via associative scan.
 
     x, a: (B, S, R) with a in (0, 1).  Returns h: (B, S, R).
+    ``reset`` (B, S) bool zeroes the state entering step t (h_t = x_t there):
+    a reset position contributes its own input but receives no history --
+    exactly "zero the carried state where reset fires", expressed as a_t := 0
+    so the associative combine stays unchanged and exact.
     """
     def combine(left, right):
         a_l, x_l = left
@@ -241,6 +279,8 @@ def rglru_scan_ref(x, a):
         return a_l * a_r, x_l * a_r + x_r
 
     a32, x32 = a.astype(jnp.float32), x.astype(jnp.float32)
+    if reset is not None:
+        a32 = jnp.where(reset[:, :, None], 0.0, a32)
     _, h = jax.lax.associative_scan(combine, (a32, x32), axis=1)
     return h.astype(x.dtype)
 

@@ -7,6 +7,12 @@ Within a chunk the recurrence is evaluated with a log2(chunk) Blelloch-style
 doubling pass built from jnp.roll-shifted multiplies — O(Q log Q) lane-wise
 VPU work instead of a Q-step serial loop, the TPU-friendly formulation of
 the GPU kernel's warp scan (DESIGN §3).
+
+Reset support: an optional (B, S) mask zeroes the carried state entering the
+flagged steps (h_t = x_t there).  Zeroing a_t at reset positions expresses
+this exactly inside the unchanged doubling scan — the zero annihilates every
+cross-reset product, including the carried-state fold at chunk boundaries —
+so left-padded serving rows cannot leak pad state into real tokens.
 """
 from __future__ import annotations
 
@@ -18,7 +24,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, a_ref, y_ref, h_ref, *, nchunks: int, chunk: int):
+def _kernel(*refs, nchunks: int, chunk: int, has_reset: bool):
+    if has_reset:
+        x_ref, a_ref, reset_ref, y_ref, h_ref = refs
+    else:
+        x_ref, a_ref, y_ref, h_ref = refs
+        reset_ref = None
     ic = pl.program_id(2)
 
     @pl.when(ic == 0)
@@ -27,6 +38,9 @@ def _kernel(x_ref, a_ref, y_ref, h_ref, *, nchunks: int, chunk: int):
 
     x = x_ref[0].astype(jnp.float32)     # (Q, R)
     a = a_ref[0].astype(jnp.float32)
+    if reset_ref is not None:
+        # a_t = 0 at reset steps: h_t = x_t, no history crosses the reset
+        a = jnp.where(reset_ref[0] > 0, 0.0, a)     # (Q, 1) lane-broadcast
 
     # inclusive scan via logarithmic doubling:
     #   (A, X)_t <- (A_t * A_{t-2^k}, X_t + A_t * X_{t-2^k})
@@ -48,27 +62,46 @@ def _kernel(x_ref, a_ref, y_ref, h_ref, *, nchunks: int, chunk: int):
     h_ref[...] = y[chunk - 1:chunk, :]
 
 
-def rglru_scan_pallas(x, a, *, chunk: int = 256, interpret: bool = False):
-    """x, a: (B, S, R) -> h (B, S, R) with h_t = a_t h_{t-1} + x_t."""
+def rglru_scan_pallas(x, a, *, reset=None, chunk: int = 256,
+                      interpret: bool = False):
+    """x, a: (B, S, R) -> h (B, S, R) with h_t = a_t h_{t-1} + x_t.
+    ``reset`` (B, S) bool: True zeroes the state entering step t.
+    S need not be a chunk multiple: the tail is right-padded with
+    (a=0, x=0) no-op steps and the padded rows are sliced off."""
     b, s, r = x.shape
     chunk = min(chunk, s)
-    assert s % chunk == 0
+    tail = (-s) % chunk
+    if tail:
+        x = jnp.pad(x, ((0, 0), (0, tail), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, tail), (0, 0)))
+        if reset is not None:
+            reset = jnp.pad(reset, ((0, 0), (0, tail)))
+        s += tail
     nchunks = s // chunk
     r_block = min(r, 512)
     assert r % r_block == 0
     nr = r // r_block
 
-    kernel = functools.partial(_kernel, nchunks=nchunks, chunk=chunk)
-    return pl.pallas_call(
+    seq_spec = lambda blk: pl.BlockSpec((1, chunk, blk),
+                                        lambda b_, ir, ic: (b_, ic, ir))
+    in_specs = [seq_spec(r_block), seq_spec(r_block)]
+    operands = [x, a]
+    if reset is not None:
+        # (B, S, 1) f32 column; the kernel lane-broadcasts it over channels
+        operands.append(reset.astype(jnp.float32)[..., None])
+        in_specs.append(pl.BlockSpec((1, chunk, 1),
+                                     lambda b_, ir, ic: (b_, ic, 0)))
+
+    kernel = functools.partial(_kernel, nchunks=nchunks, chunk=chunk,
+                               has_reset=reset is not None)
+    h = pl.pallas_call(
         kernel,
         grid=(b, nr, nchunks),
-        in_specs=[
-            pl.BlockSpec((1, chunk, r_block), lambda b_, ir, ic: (b_, ic, ir)),
-            pl.BlockSpec((1, chunk, r_block), lambda b_, ir, ic: (b_, ic, ir)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, chunk, r_block),
                                lambda b_, ir, ic: (b_, ic, ir)),
         out_shape=jax.ShapeDtypeStruct((b, s, r), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, r_block), jnp.float32)],
         interpret=interpret,
-    )(x, a)
+    )(*operands)
+    return h[:, :s - tail] if tail else h

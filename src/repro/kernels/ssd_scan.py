@@ -9,6 +9,15 @@ term applies the carried state.  This adapts Mamba2's GPU kernel (warp-level
 scans) to the TPU memory hierarchy: chunk tiles in VMEM, state in VMEM
 scratch, MXU for all O(Q^2)/O(QN) contractions (DESIGN §3/§6).
 
+Reset support (ragged serving batches): an optional (B, S) mask zeroes the
+carried state ENTERING the flagged steps.  Implemented with within-chunk
+segment ids (cumsum of the reset column) in the LINEAR domain: the
+triangular decay table is additionally masked to same-segment (q, r) pairs,
+chunk-boundary contributions drop tokens with a later in-chunk reset, the
+inter-chunk term is gated on "no reset yet", and the VMEM-carried M is
+zeroed across any chunk containing a reset.  (A log-domain -inf reset would
+be absorbed by the cumsum and corrupt every later same-segment decay.)
+
 Semantics == repro.kernels.ref.ssd_scan_ref (the oracle).
 """
 from __future__ import annotations
@@ -21,10 +30,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref,
-            y_ref, state_out_ref, m_ref, *, nchunks: int, chunk: int):
+def _kernel(*refs, nchunks: int, chunk: int, has_reset: bool):
+    if has_reset:
+        (x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref, reset_ref,
+         y_ref, state_out_ref, m_ref) = refs
+    else:
+        (x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref,
+         y_ref, state_out_ref, m_ref) = refs
+        reset_ref = None
     ic = pl.program_id(2)
-    ih = pl.program_id(1)
 
     @pl.when(ic == 0)
     def _init():
@@ -46,22 +60,38 @@ def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref,
     ldecay = cum - cum.T                         # (Q,Q) = cum_q - cum_r
     rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
-    ldecay = jnp.where(cols <= rows, ldecay, -jnp.inf)
+    keep = cols <= rows
+    if reset_ref is not None:
+        # seg[q] = #resets at in-chunk positions <= q; decay(q, r) survives
+        # only when no reset lies in (r, q] -- i.e. seg_q == seg_r.
+        seg = jnp.cumsum(reset_ref[0].astype(jnp.int32), axis=0)   # (Q,1)
+        keep = keep & (seg == seg.T)
+    ldecay = jnp.where(keep, ldecay, -jnp.inf)
     w = scores * jnp.exp(ldecay)                 # (Q,Q)
     xdt = x * dt                                 # (Q,P)
     y_intra = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())))
 
     # inter-chunk term from carried state M (N,P)
-    y_inter = jnp.exp(cum) * jax.lax.dot_general(
+    inter_decay = jnp.exp(cum)                   # (Q,1)
+    if reset_ref is not None:
+        inter_decay = jnp.where(seg == 0, inter_decay, 0.0)
+    y_inter = inter_decay * jax.lax.dot_general(
         cmat, m_ref[...], (((1,), (0,)), ((), ())))
 
     y_ref[...] = ((y_intra + y_inter + d * x)[None, None]).astype(y_ref.dtype)
 
     # state update: M <- exp(total) M + sum_r exp(total-cum_r) dt_r b_r x_r^T
     decay_to_end = jnp.exp(total - cum)          # (Q,1)
+    carry = jnp.exp(total)                       # (1,1)
+    if reset_ref is not None:
+        # tokens with a later in-chunk reset never reach the chunk boundary;
+        # M itself survives the chunk only when the chunk has no reset.
+        decay_to_end = jnp.where(seg == seg[chunk - 1:chunk, :],
+                                 decay_to_end, 0.0)
+        carry = jnp.where(seg[chunk - 1:chunk, :] == 0, carry, 0.0)
     contrib = jax.lax.dot_general(bmat * (decay_to_end * dt), x,
                                   (((0,), (0,)), ((), ())))   # (N,P)
-    m_ref[...] = m_ref[...] * jnp.exp(total) + contrib
+    m_ref[...] = m_ref[...] * carry + contrib
 
     @pl.when(ic == nchunks - 1)
     def _finish():
@@ -69,8 +99,9 @@ def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dskip_ref,
 
 
 def ssd_scan_pallas(x, dt, a_log, b, c, d_skip, *, chunk: int,
-                    interpret: bool = False):
+                    reset=None, interpret: bool = False):
     """x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,G,N), d_skip (H,).
+    ``reset`` (B, S) bool: True zeroes the state entering step t.
     Returns (y (B,S,H,P), final_state (B,H,N,P))."""
     bsz, s, h, p = x.shape
     g, n = b.shape[2], b.shape[3]
@@ -85,18 +116,26 @@ def ssd_scan_pallas(x, dt, a_log, b, c, d_skip, *, chunk: int,
     br = bh.transpose(0, 2, 1, 3)
     cr = ch.transpose(0, 2, 1, 3)
 
-    kernel = functools.partial(_kernel, nchunks=nchunks, chunk=chunk)
+    in_specs = [
+        pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        pl.BlockSpec((1, 1, chunk, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+        pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+    ]
+    operands = [xr, dtr, a_log, br, cr, d_skip]
+    if reset is not None:
+        operands.append(reset.astype(jnp.float32)[:, :, None])   # (B,S,1)
+        in_specs.append(pl.BlockSpec((1, chunk, 1),
+                                     lambda b_, h_, c_: (b_, c_, 0)))
+
+    kernel = functools.partial(_kernel, nchunks=nchunks, chunk=chunk,
+                               has_reset=reset is not None)
     y, state = pl.pallas_call(
         kernel,
         grid=(bsz, h, nchunks),
-        in_specs=[
-            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
-            pl.BlockSpec((1, 1, chunk, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
-            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
-            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
-            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
-            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
             pl.BlockSpec((1, 1, n, p), lambda b_, h_, c_: (b_, h_, 0, 0)),
@@ -107,5 +146,5 @@ def ssd_scan_pallas(x, dt, a_log, b, c, d_skip, *, chunk: int,
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
         interpret=interpret,
-    )(xr, dtr, a_log, br, cr, d_skip)
+    )(*operands)
     return y.transpose(0, 2, 1, 3), state

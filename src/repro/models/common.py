@@ -64,3 +64,15 @@ def local_mask(s_q: int, s_k: int, window: int, q_offset=0):
     qi = jnp.arange(s_q)[:, None] + q_offset
     kj = jnp.arange(s_k)[None, :]
     return (kj <= qi) & (kj > qi - window)
+
+
+def pad_reset(pad_mask):
+    """Scan-reset mask for a LEFT-padded batch: (B, S) valid-mask -> (B, S)
+    bool that is True on every pad position AND on each row's first real
+    token.  Feeding it to the reset-aware scan kernels zeroes the carried
+    state through the pad run and again entering the first real token, so
+    recurrent state can never leak from pad filler into real positions
+    (belt and braces on top of the zeroed pad inputs)."""
+    pads = ~pad_mask
+    prev_pad = jnp.pad(pads[:, :-1], ((0, 0), (1, 0)), constant_values=False)
+    return pads | prev_pad

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
-from .common import dense_init, dtype_of
+from .common import dense_init, dtype_of, pad_reset
 
 _C = 8.0
 
@@ -60,12 +60,24 @@ def _gates(params, u):
     return a, drive
 
 
-def apply_rglru(params, cfg, x, want_cache: bool = False):
-    """Full-sequence Griffin recurrent mixer. x: (B,S,D) -> (B,S,D)."""
+def apply_rglru(params, cfg, x, want_cache: bool = False, pad_mask=None):
+    """Full-sequence Griffin recurrent mixer. x: (B,S,D) -> (B,S,D).
+
+    ``pad_mask`` (B, S) bool marks valid (non-left-pad) positions of ragged
+    serving batches: pad positions are zeroed AHEAD of the temporal conv (so
+    the first real tokens' conv windows see the same zeros a solo run's left
+    conv padding provides) and a reset mask threads into the RG-LRU scan so
+    no recurrent state crosses from pad filler into real tokens.  A padded
+    row's outputs and (conv, h) cache equal its solo run's.
+    """
     u_pre = x @ params["w_x"]
+    reset = None
+    if pad_mask is not None:
+        u_pre = jnp.where(pad_mask[:, :, None], u_pre, 0.0)
+        reset = pad_reset(pad_mask)
     u = _conv_full(params, u_pre)
     a, drive = _gates(params, u)
-    h = ops.rglru_scan(drive, a)
+    h = ops.rglru_scan(drive, a, reset=reset)
     gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32))
     y = (gate * h.astype(jnp.float32)).astype(x.dtype)
     out = y @ params["w_out"]

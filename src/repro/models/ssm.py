@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from ..kernels import ops
 from ..kernels.ref import ssd_step_ref
-from .common import dense_init, dtype_of, rms_norm
+from .common import dense_init, dtype_of, pad_reset, rms_norm
 
 
 class SsmCache(NamedTuple):
@@ -74,12 +74,26 @@ def _conv_full(params, xbc):
     return jax.nn.silu(out).astype(xbc.dtype)
 
 
-def apply_ssm(params, cfg, x, want_cache: bool = False):
-    """Full-sequence SSD block. x: (B,S,D) -> (B,S,D) [, SsmCache]."""
+def apply_ssm(params, cfg, x, want_cache: bool = False, pad_mask=None):
+    """Full-sequence SSD block. x: (B,S,D) -> (B,S,D) [, SsmCache].
+
+    ``pad_mask`` (B, S) bool marks valid (non-left-pad) positions of ragged
+    serving batches.  Pad positions are zeroed AHEAD of the causal conv --
+    the first real tokens' conv windows then see exactly the zeros a solo
+    run's left conv padding provides, instead of pad-garbage embeddings --
+    and a reset mask (pads + first real token) threads into the SSD scan so
+    no carried state can cross from pad filler into real positions.  A
+    padded row's outputs, final state, and conv cache tail equal its solo
+    run's.
+    """
     d_in, p, h, n, g, _ = _dims(cfg)
     normed = rms_norm(x, params["norm"])
     proj = normed @ params["in_proj"]
     z, xbc_pre, dt_raw = _split_proj(cfg, proj)
+    reset = None
+    if pad_mask is not None:
+        xbc_pre = jnp.where(pad_mask[:, :, None], xbc_pre, 0.0)
+        reset = pad_reset(pad_mask)
     xbc = _conv_full(params, xbc_pre)
     xs, b, c = _split_xbc(cfg, xbc)
     bsz, s = x.shape[0], x.shape[1]
@@ -88,7 +102,8 @@ def apply_ssm(params, cfg, x, want_cache: bool = False):
     ch = c.reshape(bsz, s, g, n)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
     y, final_state = ops.ssd_scan(xh, dt, params["a_log"], bh, ch,
-                                  params["d_skip"], chunk=min(cfg.ssm_chunk, s))
+                                  params["d_skip"], chunk=min(cfg.ssm_chunk, s),
+                                  reset=reset)
     y = y.reshape(bsz, s, d_in)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                  params["gate_norm"])

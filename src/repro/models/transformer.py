@@ -113,28 +113,31 @@ def _layer_full(p, cfg, kind, x, positions, ctx, want_cache: bool,
                 s_max: int = 0, pad_mask=None):
     """Apply one layer to a full sequence.  Returns (x, aux, cache).
 
-    ``pad_mask`` (B, S) marks valid (non-left-pad) positions for attention
-    layers of ragged serving batches.  Recurrent kinds ("r"/"s") scan the
-    whole sequence including pads -- masking them exactly would need reset
-    threading through the scan kernels, so ragged exactness currently covers
-    attention stacks only (the serving engine's decoder-only configs).
+    ``pad_mask`` (B, S) marks valid (non-left-pad) positions of ragged
+    serving batches, and EVERY kind honors it: attention layers mask pad
+    keys, recurrent kinds ("r"/"s") zero pad inputs ahead of their causal
+    convs and thread a reset mask through the scan kernels -- a left-padded
+    row equals its solo run on any stack the engine can serve.
     """
     aux = jnp.zeros((), jnp.float32)
     cache = ()
     cdt = dtype_of(cfg.compute_dtype)
     if kind == "s":
         if want_cache:
-            y, cache = ssm_mod.apply_ssm(p["ssm"], cfg, x, want_cache=True)
+            y, cache = ssm_mod.apply_ssm(p["ssm"], cfg, x, want_cache=True,
+                                         pad_mask=pad_mask)
         else:
-            y = ssm_mod.apply_ssm(p["ssm"], cfg, x)
+            y = ssm_mod.apply_ssm(p["ssm"], cfg, x, pad_mask=pad_mask)
         return x + y, aux, cache
     if kind == "r":
         normed = rms_norm(x, p["norm1"])
         if want_cache:
             h, cache = rglru_mod.apply_rglru(p["rglru"], cfg, normed,
-                                             want_cache=True)
+                                             want_cache=True,
+                                             pad_mask=pad_mask)
         else:
-            h = rglru_mod.apply_rglru(p["rglru"], cfg, normed)
+            h = rglru_mod.apply_rglru(p["rglru"], cfg, normed,
+                                      pad_mask=pad_mask)
         x = x + h
         x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
         return x, aux, cache
@@ -293,11 +296,12 @@ def prefill(params, cfg, batch, s_max: int, pad=None):
 
     ``pad`` (B,) int32 gives each row's LEFT-pad token count for ragged
     batches: attention masks the pad positions and RoPE uses the shifted
-    per-row positions, making a padded prompt's logits exactly equal its
-    solo run (attention stacks; see ``_layer_full`` on recurrent kinds).
-    The pad vector rides in the cache (``caches["pad"]``) so ``decode_step``
-    keeps masking those slots; padless calls leave the cache structure
-    unchanged.
+    per-row positions; recurrent ("r"/"s") layers zero pad inputs ahead of
+    their convs and reset the scan state at the pad boundary -- a padded
+    prompt's logits, KV/ring caches, and recurrent state exactly equal its
+    solo run on every stack kind.  The pad vector rides in the cache
+    (``caches["pad"]``) so ``decode_step`` keeps masking those slots;
+    padless calls leave the cache structure unchanged.
     """
     tokens = batch["tokens"]
     x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))

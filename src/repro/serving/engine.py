@@ -6,13 +6,15 @@ the engine prefills them into free slots and steps all active slots together
 (synchronized decode).  Finished sequences free their slot for the next
 queued request.  Works on any decoder-only arch config.
 
-Mixed-length prompt batches are EXACT: ``_admit`` left-pads shorter prompts
-and hands the per-row pad counts to ``transformer.prefill``, which masks the
-pad positions out of attention and shifts RoPE to each row's true token
-index -- a padded prompt's tokens equal its solo run bit-for-bit (pinned by
-tests/test_serving.py::test_engine_mixed_lengths_match_solo).  The masking
-covers attention stacks; recurrent ("r"/"s") blocks still scan pads (see
-``transformer._layer_full``).
+Mixed-length prompt batches are EXACT on every stack kind: ``_admit``
+left-pads shorter prompts and hands the per-row pad counts to
+``transformer.prefill``, which masks the pad positions out of attention,
+shifts RoPE to each row's true token index, and (for recurrent "r"/"s"
+blocks) zeroes pad inputs ahead of the causal convs and resets the scan
+state at the pad boundary -- a padded prompt's tokens equal its solo run
+(pinned by tests/test_serving.py::test_engine_mixed_lengths_match_solo and
+tests/test_ragged.py for hybrid/SSM stacks on both dispatch paths).  See
+docs/serving.md for the full ragged-semantics contract.
 
 Prefill shapes are BUCKETED: prompts pad up to the next power-of-two width
 (``prefill_buckets``), so the jitted prefill compiles once per bucket --

@@ -58,6 +58,67 @@ def test_flash_attention_block_shape_sweep():
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("kind,window", [("causal", 0), ("local", 24),
+                                         ("full", 0)])
+def test_flash_attention_odd_lengths(kind, window):
+    """Non-block-multiple sequence lengths no longer trip the "pad seq to
+    block multiple" assert: the wrapper pads to the tile grid and slices."""
+    b, s, h, kv, hd = 2, 100, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    got = flash_attention_pallas(q, k, v, kind=kind, window=window,
+                                 q_block=64, k_block=64, interpret=True)
+    want = ref.attention_ref(q, k, v, mask=ref.build_mask(kind, s, s, window))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_odd_cross_shape():
+    """Cross-attention shapes (Sq != Sk, both odd) through the full kind."""
+    b, h, kv, hd = 2, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, 37, h, hd))
+    k = jax.random.normal(ks[1], (b, 75, kv, hd))
+    v = jax.random.normal(ks[2], (b, 75, kv, hd))
+    got = flash_attention_pallas(q, k, v, kind="full", q_block=32, k_block=32,
+                                 interpret=True)
+    want = ref.attention_ref(q, k, v, mask=None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kind,window", [("causal", 0), ("local", 24),
+                                         ("full", 0)])
+@pytest.mark.parametrize("s", [64, 50])
+def test_flash_attention_ragged_pad(kind, window, s):
+    """Per-row left-pad counts fold into the in-kernel mask: every real
+    (non-pad) query row matches the dense reference under the combined
+    causal+pad mask, pad rows come out finite, and fully-padded key tiles
+    are skipped (the s=64, pad=40 row covers whole-tile skips at Kb=16)."""
+    b, h, kv, hd = 3, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    pad = jnp.asarray([0, 13, 40], jnp.int32)
+    got = flash_attention_pallas(q, k, v, kind=kind, window=window,
+                                 q_block=16, k_block=16, pad=pad,
+                                 interpret=True)
+    pad_mask = jnp.arange(s)[None, :] >= pad[:, None]
+    mask = jnp.broadcast_to(pad_mask[:, None, :], (b, s, s))
+    base = ref.build_mask(kind, s, s, window)
+    if base is not None:
+        mask = mask & base[None]
+    want = ref.attention_ref(q, k, v, mask=mask)
+    gn, wn = np.asarray(got), np.asarray(want)
+    assert np.isfinite(gn).all()
+    for i in range(b):
+        np.testing.assert_allclose(gn[i, int(pad[i]):], wn[i, int(pad[i]):],
+                                   rtol=2e-5, atol=2e-5, err_msg=f"row {i}")
+
+
 def test_blocked_reference_matches_dense():
     """The XLA lowering path (attention_blocked) against the dense oracle."""
     b, s, h, kv, hd = 2, 320, 4, 2, 64
@@ -149,6 +210,65 @@ def test_ssd_decode_step_consistency():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_ssd_scan_reset():
+    """Reset-aware SSD: both dispatch arms must equal a sequential
+    ssd_step_ref loop that zeroes the state entering each reset step, with
+    resets placed mid-chunk, exactly on a chunk boundary, and per-row."""
+    b, s, h, p, g, n, chunk = 2, 64, 3, 8, 1, 4, 16
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, h))
+    bm = jax.random.normal(ks[2], (b, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    d = jnp.linspace(0.5, 1.5, h)
+    reset = (jnp.zeros((b, s), bool)
+             .at[0, 5].set(True).at[0, 16].set(True).at[1, 37].set(True))
+    state = jnp.zeros((b, h, n, p))
+    ys = []
+    for t in range(s):
+        st_in = jnp.where(reset[:, t][:, None, None, None], 0.0, state)
+        y_t, state = ref.ssd_step_ref(st_in, x[:, t], dt[:, t], a_log,
+                                      bm[:, t], cm[:, t], d)
+        ys.append(y_t)
+    y_want = np.asarray(jnp.stack(ys, axis=1))
+    st_want = np.asarray(state)
+    for name, (y, st) in {
+        "ref": ref.ssd_scan_ref(x, dt, a_log, bm, cm, d, chunk=chunk,
+                                reset=reset),
+        "pallas": ssd_scan_pallas(x, dt, a_log, bm, cm, d, chunk=chunk,
+                                  reset=reset, interpret=True),
+    }.items():
+        np.testing.assert_allclose(np.asarray(y), y_want, rtol=1e-4,
+                                   atol=1e-4, err_msg=name)
+        np.testing.assert_allclose(np.asarray(st), st_want, rtol=1e-4,
+                                   atol=1e-4, err_msg=name)
+    y_plain, _ = ref.ssd_scan_ref(x, dt, a_log, bm, cm, d, chunk=chunk)
+    assert not np.allclose(y_want, np.asarray(y_plain)), \
+        "reset must actually change the output"
+
+
+def test_ssd_scan_odd_length_dispatch():
+    """ops.ssd_scan pads non-chunk-multiple S with dt=0 steps: y matches a
+    chunk=1 exact scan and the final state is untouched by the padding."""
+    from repro.kernels import ops
+    b, s, h, p, g, n = 1, 13, 2, 8, 1, 4
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    bm = jax.random.normal(ks[2], (b, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    d = jnp.ones((h,))
+    y, st = ops.ssd_scan(x, dt, a_log, bm, cm, d, chunk=8)
+    y_want, st_want = ref.ssd_scan_ref(x, dt, a_log, bm, cm, d, chunk=1)
+    assert y.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_want),
+                               rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # RG-LRU scan
 # ---------------------------------------------------------------------------
@@ -162,6 +282,59 @@ def test_rglru_scan(b, s, r, chunk):
     a = jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, r)) + 2.0)
     got = rglru_scan_pallas(x, a, chunk=chunk, interpret=True)
     want = ref.rglru_scan_ref(x, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _rglru_reset_oracle(x, a, reset):
+    """Plain python recurrence with state zeroing at reset steps."""
+    b, s, r = x.shape
+    h = np.zeros((b, r))
+    out = []
+    for t in range(s):
+        h = np.where(reset[:, t, None], 0.0, a[:, t] * h) + x[:, t]
+        out.append(h.copy())
+    return np.stack(out, 1)
+
+
+def test_rglru_scan_reset():
+    """Regression: ops.rglru_scan used to silently DROP a non-None reset on
+    both dispatch arms.  A reset must (a) change the output and (b) match
+    the sequential state-zeroing oracle on the reference AND the
+    interpreted-Pallas path, including resets at chunk boundaries."""
+    b, s, r = 2, 64, 16
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (b, s, r)) * 0.3
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, r)) + 2.0)
+    # mid-chunk, chunk-boundary (16 at chunk=16), and per-row distinct resets
+    reset = (jnp.zeros((b, s), bool)
+             .at[0, 5].set(True).at[0, 16].set(True).at[1, 37].set(True))
+    want = _rglru_reset_oracle(np.asarray(x), np.asarray(a), np.asarray(reset))
+    got_ref = ref.rglru_scan_ref(x, a, reset=reset)
+    got_pal = rglru_scan_pallas(x, a, reset=reset, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_ref), want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_pal), want, rtol=1e-4, atol=1e-4)
+    plain = np.asarray(ref.rglru_scan_ref(x, a))
+    assert not np.allclose(np.asarray(got_ref), plain), \
+        "reset was ignored on the reference path"
+    assert not np.allclose(np.asarray(got_pal), plain), \
+        "reset was ignored on the Pallas path"
+
+
+def test_rglru_scan_odd_length():
+    """Non-chunk-multiple S on the Pallas path: the wrapper right-pads with
+    (a=0, x=0) no-op steps and slices back (with and without reset)."""
+    b, s, r = 2, 37, 16
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (b, s, r)) * 0.3
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, r)) + 2.0)
+    got = rglru_scan_pallas(x, a, chunk=16, interpret=True)
+    want = ref.rglru_scan_ref(x, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    reset = jnp.zeros((b, s), bool).at[:, 20].set(True)
+    got = rglru_scan_pallas(x, a, reset=reset, chunk=16, interpret=True)
+    want = ref.rglru_scan_ref(x, a, reset=reset)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 

@@ -1,0 +1,212 @@
+"""Ragged-batch exactness across EVERY architecture kind the engine serves.
+
+PR 3 made attention stacks pad-exact; this suite pins the remaining gaps
+closed: recurrent ("r") and SSD ("s") blocks no longer scan left-pad
+positions (reset-aware scan kernels + pad-zeroed conv inputs), and the
+Pallas flash kernel serves ragged batches directly (per-row pad counts in
+the in-kernel mask) instead of falling back to the dense reference.
+
+Layers covered:
+  * model level -- left-padded prefill + decode equals the solo run for
+    hybrid ("r"+attention), pure-SSM ("s"), and mixed ("g","r","s") stacks,
+    on the reference AND the interpreted-Pallas dispatch path;
+  * engine level -- mixed-length prompt batches through ServingEngine match
+    solo runs greedy-token-for-greedy-token on recurrent stacks;
+  * dispatch level -- ops.flash_attention(pad_mask=...) keeps the Pallas
+    path when Pallas is active (the dense-reference fallback is gone);
+  * property level -- prefill logits are invariant to the pad count across
+    engine bucket widths (hypothesis; fixed-examples fallback on bare envs).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import get_config, reduced
+from repro.kernels import ops
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _hybrid_grs():
+    """Mixed stack exercising attention + RG-LRU + SSD in one unit."""
+    return dataclasses.replace(
+        reduced(get_config("mamba2-1.3b")),
+        name="hybrid-grs-smoke", block_pattern=("g", "r", "s"),
+        n_layers=6, n_heads=4, n_kv=2, head_dim=16, d_ff=128, rnn_width=32)
+
+
+def _configs():
+    return [
+        ("recurrentgemma", reduced(get_config("recurrentgemma-2b"))),
+        ("mamba2", reduced(get_config("mamba2-1.3b"))),
+        ("hybrid-grs", _hybrid_grs()),
+    ]
+
+
+CONFIGS = _configs()
+
+
+@pytest.fixture(scope="module", params=[c[0] for c in CONFIGS])
+def arch(request):
+    cfg = dict(CONFIGS)[request.param]
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prefill_pair(cfg, params, prompt, pad_width, s_max=48):
+    """(solo logits+cache, padded-row logits+cache) for one prompt."""
+    lg_s, c_s = transformer.prefill(params, cfg, {"tokens": prompt[None]},
+                                    s_max=s_max)
+    width = len(prompt) + pad_width
+    other = jax.random.randint(jax.random.PRNGKey(2), (width,), 0, cfg.vocab)
+    toks = jnp.stack([jnp.pad(prompt, (pad_width, 0)), other])
+    pad = jnp.asarray([pad_width, 0], jnp.int32)
+    lg_p, c_p = transformer.prefill(params, cfg, {"tokens": toks},
+                                    s_max=s_max, pad=pad)
+    return (lg_s, c_s), (lg_p, c_p)
+
+
+def _check_decode(cfg, params, lg_s, c_s, lg_p, c_p, steps=3):
+    t_s = jnp.argmax(lg_s, -1).astype(jnp.int32)
+    t_p = jnp.argmax(lg_p, -1).astype(jnp.int32)
+    for i in range(steps):
+        lg_s, c_s = transformer.decode_step(params, cfg, c_s, t_s)
+        lg_p, c_p = transformer.decode_step(params, cfg, c_p, t_p)
+        np.testing.assert_allclose(np.asarray(lg_p[0]), np.asarray(lg_s[0]),
+                                   err_msg=f"decode step {i}", **TOL)
+        assert int(jnp.argmax(lg_p[0])) == int(jnp.argmax(lg_s[0]))
+        t_s = jnp.argmax(lg_s, -1).astype(jnp.int32)
+        t_p = jnp.argmax(lg_p, -1).astype(jnp.int32)
+
+
+def test_left_padded_row_equals_solo_reference(arch):
+    """Tier-1 leg: reference dispatch path, prefill + decode parity."""
+    cfg, params = arch
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (9,), 0, cfg.vocab)
+    ops.set_impl("reference")
+    try:
+        (lg_s, c_s), (lg_p, c_p) = _prefill_pair(cfg, params, prompt, 6)
+        np.testing.assert_allclose(np.asarray(lg_p[0]), np.asarray(lg_s[0]),
+                                   **TOL)
+        _check_decode(cfg, params, lg_s, c_s, lg_p, c_p)
+    finally:
+        ops.set_impl("auto")
+
+
+@pytest.mark.slow
+def test_left_padded_row_equals_solo_pallas(arch):
+    """Interpreted-Pallas dispatch path: same parity, kernel bodies live."""
+    cfg, params = arch
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (9,), 0, cfg.vocab)
+    ops.set_impl("pallas", interpret=True)
+    try:
+        (lg_s, c_s), (lg_p, c_p) = _prefill_pair(cfg, params, prompt, 6)
+        np.testing.assert_allclose(np.asarray(lg_p[0]), np.asarray(lg_s[0]),
+                                   **TOL)
+        _check_decode(cfg, params, lg_s, c_s, lg_p, c_p)
+    finally:
+        ops.set_impl("auto")
+
+
+def test_engine_mixed_lengths_match_solo_recurrent():
+    """Engine-level: mixed-length prompts through a hybrid (r+l) stack equal
+    their solo runs greedy-token-for-greedy-token (the ROADMAP's last
+    'recurrent blocks still scan pads' caveat, retired)."""
+    cfg = reduced(get_config("recurrentgemma-2b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 9, 12)]
+    eng = ServingEngine(cfg, params, slots=3, s_max=64)
+    reqs = [Request(rid=i, prompt=p, max_new=4)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_idle()
+    assert len(finished) == 3
+    for p, r in zip(prompts, reqs):
+        solo_eng = ServingEngine(cfg, params, slots=1, s_max=64)
+        solo = Request(rid=0, prompt=p, max_new=4)
+        solo_eng.submit(solo)
+        solo_eng.run_until_idle()
+        assert r.out == solo.out, f"prompt len {len(p)}"
+
+
+def test_flash_attention_pad_mask_keeps_pallas_path(monkeypatch):
+    """Acceptance pin: with Pallas active, ops.flash_attention(pad_mask=...)
+    dispatches the masked Pallas kernel -- no dense-reference fallback."""
+    import repro.kernels.flash_attention as fa
+    calls = []
+    real = fa.flash_attention_pallas
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("pad"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(fa, "flash_attention_pallas", counting)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, h, kv, hd = 2, 16, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    pad_mask = jnp.arange(s)[None, :] >= jnp.asarray([[0], [5]])
+    ops.set_impl("pallas", interpret=True)
+    try:
+        got = ops.flash_attention(q, k, v, kind="causal", pad_mask=pad_mask)
+    finally:
+        ops.set_impl("auto")
+    assert len(calls) == 1 and calls[0] is not None, \
+        "ragged batch fell back off the Pallas path"
+    # and the masked kernel agrees with the dense reference it replaced
+    from repro.kernels import ref
+    mask = (jnp.broadcast_to(pad_mask[:, None, :], (b, s, s))
+            & ref.build_mask("causal", s, s)[None])
+    want = ref.attention_ref(q, k, v, mask=mask)
+    np.testing.assert_allclose(np.asarray(got)[1, 5:], np.asarray(want)[1, 5:],
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(want)[0],
+                               rtol=2e-5, atol=2e-5)
+
+
+class TestPadInvariance:
+    """Prefill logits are invariant to the pad count across bucket widths.
+
+    Drawn pad widths round up to the engine's power-of-two prefill buckets
+    (exactly what ``ServingEngine._admit`` does), so the jitted prefill
+    compiles one shape per bucket -- the property then exercises every
+    bucket's pad path at fixed-examples cost, not one compile per draw.
+    """
+    cfg = reduced(get_config("recurrentgemma-2b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (7,), 0, cfg.vocab)
+    solo = None
+
+    @classmethod
+    def _solo(cls):
+        if cls.solo is None:
+            lg, _ = transformer.prefill(cls.params, cls.cfg,
+                                        {"tokens": cls.prompt[None]}, s_max=64)
+            cls.solo = np.asarray(lg[0])
+        return cls.solo
+
+    @given(pad_width=st.integers(0, 25))
+    @settings(max_examples=12, deadline=None)
+    def test_logits_invariant_to_pad_count(self, pad_width):
+        """Any left-pad amount (bucket slack included; 7+25=32 spans the
+        8/16/32 engine buckets) leaves the row's logits unchanged."""
+        width = 8
+        while width < len(self.prompt) + pad_width:
+            width *= 2
+        pad_width = width - len(self.prompt)        # bucket-rounded pad
+        toks = jnp.pad(self.prompt, (pad_width, 0))[None]
+        pad = jnp.asarray([pad_width], jnp.int32)
+        lg, _ = transformer.prefill(self.params, self.cfg, {"tokens": toks},
+                                    s_max=64, pad=pad)
+        np.testing.assert_allclose(np.asarray(lg[0]), self._solo(), **TOL)
