@@ -19,6 +19,11 @@ decision -> C7 projection -> P3/P4/P5 convex allocation -> queue update):
   ``python -m benchmarks.scenario_grid``).  Forced host devices share the
   machine's cores, so the sharded leg measures partitioning overhead /
   scaling shape, not a real multi-chip speedup; it is reported, not gated.
+* 2-D sharded -- (``--model M``, with ``--devices N``) the same grid over
+  the ``("cells", "model")`` mesh: N/M cell shards x M-way per-cell tensor
+  parallelism (``use_mesh(model=M)``).  Layout preconditions (M divides N,
+  N devices actually forcible) are validated up front with actionable
+  errors -- never an opaque XLA device-assignment failure.
 
 Reported unit: slots/sec, where one slot = one (cell, time-slot) advance of
 all N UEs.  CSV rows follow the benchmarks/run.py convention.
@@ -26,7 +31,6 @@ all N UEs.  CSV rows follow the benchmarks/run.py convention.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -100,17 +104,27 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=0,
                     help="also run a cells-sharded leg over this many "
                          "(forced host) devices")
+    ap.add_argument("--model", type=int, default=1,
+                    help="per-cell tensor-parallel degree for the sharded "
+                         "leg: a ('cells','model') mesh with --devices/M "
+                         "cell shards x M-way model parallelism "
+                         "(requires --devices divisible by M)")
     ap.add_argument("--gate", type=float, default=5.0,
                     help="min batched-over-loop speedup for exit code 0 "
                          "(0 disables the gate -- e.g. informational runs "
                          "on small configs or contended runners)")
     args = ap.parse_args(argv)
 
+    from benchmarks._sharded import (backend_ready, force_devices, leg_tag,
+                                     validate_mesh_args)
+    # Validate the 2-D layout BEFORE touching jax: the same rules
+    # make_cells_mesh enforces, surfaced pre-init with the exact flags.
+    err = validate_mesh_args(args.devices, args.model)
+    if err:
+        print(f"error: {err}")
+        return 2
     if args.devices:
-        # Must land before jax initializes its backend (first array op).
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.devices}")
+        force_devices(args.devices)   # before jax initializes its backend
 
     grid = build_grid(args.cells, args.ues, args.seed)
     print(f"grid: B={grid.b} cells x N={grid.n_ue} UEs x C={grid.num_cuts} "
@@ -126,20 +140,24 @@ def main(argv=None) -> int:
           f"slots_per_s={sps_l:.0f}")
 
     if args.devices:
-        if len(jax.devices()) < args.devices:
+        tag = leg_tag(args.devices, args.model)
+        if not backend_ready(args.devices):
             print(f"scenario_grid_sharded[{grid.b}x{grid.n_ue}"
-                  f"@{args.devices}dev],0,SKIPPED_backend_already_initialized")
+                  f"{tag}],0,SKIPPED_backend_already_initialized")
         else:
             from repro.launch.mesh import make_cells_mesh
+            # Layout preconditions were validated pre-init; make_cells_mesh
+            # re-checks them and raises an actionable ValueError either way.
             grid_sh = build_grid(args.cells, args.ues, args.seed)
-            grid_sh.use_mesh(make_cells_mesh(args.devices))
+            grid_sh.use_mesh(make_cells_mesh(args.devices,
+                                             model=args.model))
             dt_s, sps_s = bench_batched(grid_sh, args.policy, args.steps,
                                         args.repeats)
             print(f"scenario_grid_sharded[{grid.b}x{grid.n_ue}"
-                  f"@{args.devices}dev],{dt_s*1e6:.0f},"
+                  f"{tag}],{dt_s*1e6:.0f},"
                   f"slots_per_s={sps_s:.0f}")
             print(f"scenario_grid_sharded_speedup[{grid.b}x{grid.n_ue}"
-                  f"@{args.devices}dev],0,"
+                  f"{tag}],0,"
                   f"sharded_over_batched={sps_s / sps_b:.2f}x")
 
     speedup = sps_b / sps_l

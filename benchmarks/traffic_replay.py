@@ -20,6 +20,11 @@ Pipeline (the tentpole demo of the traffic subsystem):
    (batched==looped parity), then slots/sec and the batched-over-loop
    speedup are reported.  CSV rows follow the benchmarks/run.py convention.
 
+``--devices N`` adds a cells-sharded replay leg over N forced host devices,
+and ``--model M`` makes it the 2-D ``("cells", "model")`` mesh (N/M cell
+shards x M-way per-cell tensor parallelism); layout preconditions are
+validated up front, as in benchmarks/scenario_grid.py.
+
 ``--gate 0`` (default) is informational; pass a positive speedup bar to get
 a nonzero exit code below it (CI runs the informational mode -- the hard 5x
 bar lives in benchmarks/scenario_grid.py where the grid is larger).
@@ -156,10 +161,26 @@ def main(argv=None) -> int:
     ap.add_argument("--save-trace", default=None, metavar="NPZ",
                     help="also save the recorded trace for reuse "
                          "(python -m repro.traffic --show NPZ)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="also run a cells-sharded replay leg over this "
+                         "many (forced host) devices")
+    ap.add_argument("--model", type=int, default=1,
+                    help="per-cell tensor-parallel degree for the sharded "
+                         "leg (('cells','model') mesh; must divide "
+                         "--devices)")
     ap.add_argument("--gate", type=float, default=0.0,
                     help="min batched-over-loop speedup for exit code 0 "
                          "(0 = informational)")
     args = ap.parse_args(argv)
+
+    from benchmarks._sharded import (backend_ready, force_devices, leg_tag,
+                                     validate_mesh_args)
+    err = validate_mesh_args(args.devices, args.model)
+    if err:
+        print(f"error: {err}")
+        return 2
+    if args.devices:
+        force_devices(args.devices)   # before jax initializes its backend
 
     trace = (record_serving_trace(args.ues, seed=args.seed)
              if args.source == "serving"
@@ -182,6 +203,30 @@ def main(argv=None) -> int:
                                            args.repeats)
     print(f"traffic_replay_loop[{grid.b}x{grid.n_ue}],{dt_l*1e6:.0f},"
           f"slots_per_s={sps_l:.0f}")
+
+    if args.devices:
+        tag = leg_tag(args.devices, args.model)
+        if not backend_ready(args.devices):
+            print(f"traffic_replay_sharded[{grid.b}x{grid.n_ue}"
+                  f"{tag}],0,SKIPPED_backend_already_initialized")
+        else:
+            from repro.launch.mesh import make_cells_mesh
+            grid_sh = build_grid(trace, args.cells, args.seed)
+            grid_sh.use_mesh(make_cells_mesh(args.devices,
+                                             model=args.model))
+            dt_s, sps_s, sum_s = bench_batched(grid_sh, args.policy,
+                                               args.steps, args.repeats)
+            err_s = float(np.max(np.abs(
+                np.asarray(sum_s["reward"]) - np.asarray(summary["reward"]))
+                / np.maximum(np.abs(np.asarray(summary["reward"])), 1e-7)))
+            print(f"traffic_replay_sharded[{grid.b}x{grid.n_ue}{tag}],"
+                  f"{dt_s*1e6:.0f},slots_per_s={sps_s:.0f}")
+            print(f"traffic_replay_sharded_parity[{grid.b}x{grid.n_ue}"
+                  f"{tag}],0,max_rel_err={err_s:.2e}"
+                  f"_{'OK' if err_s < 1e-5 else 'FAIL'}")
+            if err_s >= 1e-5:
+                print("PARITY FAILURE: sharded and batched replays diverged")
+                return 1
 
     # batched == looped parity on per-cell mean reward (identical keys)
     batched = np.asarray(summary["reward"])

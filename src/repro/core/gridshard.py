@@ -19,6 +19,16 @@ module spreads that program across a device mesh's ``"cells"`` axis
   padded on 8 devices or unpadded on one -- the invariant behind the
   sharded==unsharded parity tests (tests/test_gridshard.py).
 
+On a 2-D ``("cells", "model")`` mesh (``make_cells_mesh(model=M)``) the plan
+additionally spreads each cell's *interior* over the ``"model"`` axis: the
+dim immediately after the cell axis -- the per-cell UE axis of the stacked
+``MecParams``/``MecState`` tables, the row axis of the (B, N, C) objective
+sweep -- shards M-way whenever it divides, and replicates otherwise (the
+exact-sharding discipline of ``launch.sharding._shard_if``).  Layout only:
+pad/mask/place/unpad semantics are unchanged and sharded(cells, model)
+rollouts equal unsharded ones to 1e-5 for every registered scenario
+(tests/test_gridshard.py's registry-wide parity suite).
+
 Everything here is layout logic only; the per-cell physics stays the pure
 ``step_p`` / ``reset_p`` of :mod:`repro.core.env`.  That includes per-cell
 traffic state riding inside ``MecParams.arrival`` (e.g. a ``(B, T, N)``
@@ -34,6 +44,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 CELL_AXIS = "cells"
+MODEL_AXIS = "model"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,12 +53,18 @@ class GridSharding:
 
     ``b`` logical cells are padded to ``b_padded`` (a multiple of the mesh's
     ``axis`` size) so every device holds the same number of cells.
+
+    ``model_axis`` names the per-cell tensor-parallel mesh axis (present on
+    ``("cells", "model")`` meshes): each leaf's first post-cell dim shards
+    over it when evenly divisible, giving every cell ``n_model``-way interior
+    parallelism on top of the cell split.
     """
 
     mesh: Mesh
     b: int
     b_padded: int
     axis: str = CELL_AXIS
+    model_axis: str | None = None
 
     def __post_init__(self):
         if self.b_padded < self.b:
@@ -56,10 +73,22 @@ class GridSharding:
             raise ValueError(
                 f"b_padded={self.b_padded} not a multiple of the "
                 f"{self.n_shards}-way {self.axis!r} axis")
+        if self.model_axis is not None \
+                and self.model_axis not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh has no {self.model_axis!r} axis; axes are "
+                f"{self.mesh.axis_names}")
 
     @property
     def n_shards(self) -> int:
         return int(self.mesh.shape[self.axis])
+
+    @property
+    def n_model(self) -> int:
+        """Per-cell tensor-parallel degree (1 on a cells-only mesh)."""
+        if self.model_axis is None:
+            return 1
+        return int(self.mesh.shape[self.model_axis])
 
     @property
     def pad(self) -> int:
@@ -74,20 +103,39 @@ class GridSharding:
         """
         return jnp.arange(self.b_padded) < self.b
 
-    def spec(self, ndim: int, lead: int = 0) -> P:
+    def spec(self, ndim: int, lead: int = 0, shape: tuple | None = None,
+             *, model_dim: int | None = None) -> P:
         """PartitionSpec sharding dim ``lead`` over the cells axis.
 
         Leaves too small to carry a cell axis (0-d scalars riding in a
         pytree) replicate instead of indexing past their rank.
+
+        When the plan carries a ``model_axis`` and the leaf ``shape`` is
+        known, one interior dim additionally shards over it: ``lead + 1``
+        by default (the per-cell UE axis of stacked MecParams/MecState
+        tables), or ``model_dim`` when given (e.g. ``-1`` for arrival
+        leaves, whose post-cell dim is a per-slot TIME axis that the hot
+        loop indexes every step -- sharding it would gather across shards
+        per slot).  Only evenly dividing dims shard (exact shardings,
+        never GSPMD padding); everything else replicates across the
+        model axis.
         """
         if ndim <= lead:
             return P()
         entries: list = [None] * ndim
         entries[lead] = self.axis
+        if (self.model_axis is not None and shape is not None
+                and self.n_model > 1):
+            md = lead + 1 if model_dim is None else model_dim % ndim
+            if md != lead and md < ndim and shape[md] % self.n_model == 0:
+                entries[md] = self.model_axis
         return P(*entries)
 
-    def sharding(self, ndim: int, lead: int = 0) -> NamedSharding:
-        return NamedSharding(self.mesh, self.spec(ndim, lead))
+    def sharding(self, ndim: int, lead: int = 0, shape: tuple | None = None,
+                 *, model_dim: int | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             self.spec(ndim, lead, shape,
+                                       model_dim=model_dim))
 
 
 def plan(b: int, mesh: Mesh, *, axis: str = CELL_AXIS,
@@ -97,6 +145,10 @@ def plan(b: int, mesh: Mesh, *, axis: str = CELL_AXIS,
     ``pad_to`` forces a larger padded width (it must itself be a device
     multiple) -- used by tests to exercise the padding path on any device
     count, and available for aligning two grids to one layout.
+
+    A mesh carrying a ``"model"`` axis (``make_cells_mesh(model=M)``)
+    activates per-cell tensor parallelism: the plan records the axis and
+    :meth:`GridSharding.spec` spreads each leaf's post-cell dim over it.
     """
     if axis not in mesh.axis_names:
         raise ValueError(
@@ -110,7 +162,9 @@ def plan(b: int, mesh: Mesh, *, axis: str = CELL_AXIS,
             raise ValueError(
                 f"pad_to={pad_to} must be a multiple of {n} and >= {b_padded}")
         b_padded = pad_to
-    return GridSharding(mesh=mesh, b=b, b_padded=b_padded, axis=axis)
+    model_axis = MODEL_AXIS if MODEL_AXIS in mesh.axis_names else None
+    return GridSharding(mesh=mesh, b=b, b_padded=b_padded, axis=axis,
+                        model_axis=model_axis)
 
 
 def pad_cells(tree, gs: GridSharding, *, lead: int = 0):
@@ -133,13 +187,18 @@ def pad_cells(tree, gs: GridSharding, *, lead: int = 0):
     return jax.tree.map(pad_leaf, tree)
 
 
-def place(tree, gs: GridSharding, *, lead: int = 0):
+def place(tree, gs: GridSharding, *, lead: int = 0,
+          model_dim: int | None = None):
     """``device_put`` every leaf with the cells-axis NamedSharding.
 
     Leaves must already be padded to ``gs.b_padded`` on axis ``lead``.
+    ``model_dim`` overrides which dim takes the model axis (see
+    :meth:`GridSharding.spec`).
     """
     return jax.tree.map(
-        lambda x: jax.device_put(x, gs.sharding(x.ndim, lead)), tree)
+        lambda x: jax.device_put(
+            x, gs.sharding(x.ndim, lead, x.shape, model_dim=model_dim)),
+        tree)
 
 
 def constrain(tree, gs: GridSharding, *, lead: int = 0):
@@ -149,7 +208,8 @@ def constrain(tree, gs: GridSharding, *, lead: int = 0):
     over cells instead of gathering between slots.
     """
     def f(x):
-        return jax.lax.with_sharding_constraint(x, gs.sharding(x.ndim, lead))
+        return jax.lax.with_sharding_constraint(
+            x, gs.sharding(x.ndim, lead, x.shape))
 
     return jax.tree.map(f, tree)
 

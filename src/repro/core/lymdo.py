@@ -220,8 +220,10 @@ def run_fixed_batched(grid, policy="oracle", episodes: int = 1,
 
     A device-sharded grid (``grid.use_mesh(...)``; see repro.core.gridshard)
     is accepted transparently: the rollout runs partitioned over the mesh's
-    "cells" axis and still returns logical-B outputs that match the
-    single-device run to 1e-5.
+    "cells" axis -- and, on a ``("cells", "model")`` mesh
+    (``use_mesh(model=M)``), with M-way per-cell tensor parallelism -- and
+    still returns logical-B outputs that match the single-device run to
+    1e-5.
     """
     rollout = grid.make_rollout(policy, steps)
     key = jax.random.PRNGKey(seed)

@@ -24,9 +24,13 @@ checked ``kernels.ref`` / pure-lax path elsewhere.
    (B, ...) pytree over a ``("cells",)`` device mesh
    (``repro.launch.mesh.make_cells_mesh``) with ``NamedSharding``; uneven B
    is padded to a device multiple with a validity mask
-   (``repro.core.gridshard``).  The jitted rollout is unchanged -- GSPMD
-   partitions the vmap+scan over devices -- and sharded rollouts match
-   single-device ones to 1e-5 (padded cells never pollute summaries).
+   (``repro.core.gridshard``).  ``use_mesh(model=M)`` activates the 2-D
+   ``("cells", "model")`` mesh: M-way per-cell tensor parallelism over each
+   cell's UE axis on top of the cell split.  The jitted rollout is
+   unchanged -- GSPMD partitions the vmap+scan over devices -- and sharded
+   rollouts (1-D or 2-D) match single-device ones to 1e-5 for EVERY
+   registered scenario (padded cells never pollute summaries; pinned by
+   tests/test_gridshard.py's registry-wide parity suite).
 """
 from __future__ import annotations
 
@@ -256,12 +260,19 @@ def trace_replay(trace=None, path: str | None = None, offset: int = 0,
     ``.npz``); the cell's fleet is a ``hetero_fleet`` sized to the trace's UE
     count.  ``offset`` rotates the trace so B cells built from one recording
     replay de-phased copies (per-cell diversity without per-cell recordings).
+
+    With neither ``trace`` nor ``path``, a small deterministic MMPP demo
+    trace is materialized (every registry constructor must build with zero
+    args -- the contract the registry-wide parity suite relies on; see
+    docs/scenarios.md).
     """
-    from ..traffic.trace import Trace
+    from ..traffic.trace import Trace, from_process
     if trace is None:
         if path is None:
-            raise ValueError("trace_replay needs trace= or path=")
-        trace = Trace.load(path)
+            proc = traffic.make_mmpp(4, seed=seed, horizon=64)
+            trace = from_process(proc, 64)
+        else:
+            trace = Trace.load(path)
     if offset:
         trace = trace.shifted(offset)
     cell = hetero_fleet(n_ue=trace.n_ue, seed=seed, rate_range=rate_range)
@@ -431,21 +442,46 @@ class ScenarioGrid:
         device multiple when sharded)."""
         return self.b if self.gridshard is None else self.gridshard.b_padded
 
-    def use_mesh(self, mesh=None, *, pad_to: int | None = None):
+    def use_mesh(self, mesh=None, *, model: int = 1,
+                 pad_to: int | None = None):
         """Shard the stacked grid over ``mesh``'s ``"cells"`` axis.
 
-        ``mesh=None`` builds a 1-D mesh over every live device
-        (``repro.launch.mesh.make_cells_mesh``).  B is padded up to a
-        multiple of the cell-shard count (``pad_to`` forces a wider pad --
-        mainly for tests); padded cells replicate the last real cell and are
-        masked out of every rollout summary.  Returns ``self``.
+        ``mesh=None`` builds a mesh over every live device
+        (``repro.launch.mesh.make_cells_mesh``); ``model=M > 1`` makes it
+        the 2-D ``("cells", "model")`` mesh -- M-way per-cell tensor
+        parallelism, spreading the post-cell dim of every stacked table
+        (the UE axis of params/states, hence the rows of the (B, N, C)
+        objective sweep) over the model axis where divisible.  A mesh passed
+        explicitly must agree with a non-default ``model``.
+
+        B is padded up to a multiple of the cell-shard count (``pad_to``
+        forces a wider pad -- mainly for tests); padded cells replicate the
+        last real cell and are masked out of every rollout summary.
+        Sharded rollouts -- 1-D or 2-D -- equal unsharded ones to 1e-5.
+        Returns ``self``.
         """
         if mesh is None:
             from ..launch.mesh import make_cells_mesh
-            mesh = make_cells_mesh()
+            mesh = make_cells_mesh(model=model)
+        elif model != 1:
+            have = dict(mesh.shape).get(gridshard.MODEL_AXIS, 1)
+            if have != model:
+                raise ValueError(
+                    f"use_mesh(model={model}) but the given mesh has a "
+                    f"{have}-way {gridshard.MODEL_AXIS!r} axis; pass "
+                    "mesh=None to build a matching one (make_cells_mesh)")
         gs = gridshard.plan(self.b, mesh, pad_to=pad_to)
         padded = gridshard.pad_cells(self.params, gs)
-        self._run_params = gridshard.place(padded, gs)
+        placed = gridshard.place(padded, gs)
+        if gs.n_model > 1 and jax.tree.leaves(padded.arrival):
+            # Arrival leaves put the model axis on their LAST dim (the UE
+            # axis): their post-cell dim is per-slot time -- e.g. a
+            # (B, T, N) trace -- which every step indexes, and sharding it
+            # would gather across model shards once per slot.
+            placed = dataclasses.replace(
+                placed, arrival=gridshard.place(padded.arrival, gs,
+                                                model_dim=-1))
+        self._run_params = placed
         self.gridshard = gs
         return self
 

@@ -26,22 +26,40 @@ def data_axes(mesh) -> tuple:
 
 
 def make_cells_mesh(n_devices: int | None = None, *, model: int = 1):
-    """1-D ``("cells",)`` mesh for sharding a ScenarioGrid's stacked cell
-    axis (see repro.core.gridshard).
+    """Mesh for sharding a ScenarioGrid's stacked cell axis (see
+    repro.core.gridshard): 1-D ``("cells",)``, or 2-D ``("cells", "model")``
+    when ``model > 1`` -- the trailing axis carries per-cell tensor
+    parallelism (grid tables shard their post-cell dim, served LM weights
+    shard their head/FFN dims via ``launch.sharding.param_spec``).
 
     ``n_devices=None`` uses every live device (on CPU, force several with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
-    initializes).  ``model > 1`` reserves a trailing "model" axis --
-    ``("cells", "model")`` -- so a future per-cell tensor-parallel dimension
-    can slot in without relayout; cells then get ``n_devices // model``
+    initializes).  With ``model > 1`` cells get ``n_devices // model``
     shards.
+
+    Every layout precondition is validated HERE, with an actionable message,
+    so callers (benchmarks, tests, grids) never surface an opaque XLA
+    device-assignment error.
     """
-    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    avail = len(jax.devices())
+    n = avail if n_devices is None else int(n_devices)
+    model = int(model)
     if n < 1:
-        raise ValueError("need at least one device")
+        raise ValueError(f"need at least one device, got n_devices={n}")
+    if n > avail:
+        raise ValueError(
+            f"requested a {n}-device cells mesh but only {avail} device(s) "
+            f"are live; on CPU force more with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax "
+            "initializes (anything that touches jax arrays locks the count)")
+    if model < 1:
+        raise ValueError(f"model axis size must be >= 1, got model={model}")
+    if n % model:
+        raise ValueError(
+            f"model={model} does not divide the {n}-device mesh; pick a "
+            f"model-axis size from the divisors of {n} "
+            f"(e.g. {[d for d in (1, 2, 4, 8) if n % d == 0]})")
     if model > 1:
-        if n % model:
-            raise ValueError(f"{n} devices not divisible by model={model}")
         return jax.make_mesh((n // model, model), ("cells", "model"))
     return jax.make_mesh((n,), ("cells",))
 

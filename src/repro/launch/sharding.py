@@ -173,17 +173,33 @@ def param_spec(mesh, cfg, path: str, shape: tuple,
     if name == "router":
         return spec(_shard_if(mesh, body[0], fsdp) if fsdp else None, None)
 
-    # attention / dense FFN 2D weights
+    # attention / dense FFN 2D weights.  Attention projections shard on
+    # "model" only when the HEAD COUNT divides the axis: a flat-dim check
+    # alone would split a head across shards (e.g. 2 kv heads x hd=16 on a
+    # 4-way axis), breaking the head-granular TP contract in the module
+    # docstring -- per-head ops (RoPE, qk-norm, GQA grouping) then straddle
+    # shard boundaries and reshard through every reshape.
     if name in ("wq", "wk", "wv", "w1", "w3", "w_x", "w_gate", "in_proj"):
+        tp_ax = "model" if layer_tp else None
+        if name in ("wq", "wk", "wv"):
+            heads = cfg.n_heads if name == "wq" else (cfg.n_kv or cfg.n_heads)
+            if heads % _axis_size(mesh, "model"):
+                tp_ax = None
         return spec(_shard_if(mesh, body[0], fsdp) if fsdp else None,
-                    _shard_if(mesh, body[1], "model") if layer_tp else None)
+                    _shard_if(mesh, body[1], tp_ax))
     if name in ("wo", "w2", "w_out", "out_proj"):
-        return spec(_shard_if(mesh, body[0], "model") if layer_tp else None,
+        tp_ax = "model" if layer_tp else None
+        if name == "wo" and cfg.n_heads % _axis_size(mesh, "model"):
+            tp_ax = None                     # head-granular TP (see above)
+        return spec(_shard_if(mesh, body[0], tp_ax),
                     _shard_if(mesh, body[1], fsdp) if fsdp else None)
     if name in ("w_r", "w_i"):   # RG-LRU channel-coupling gates
         return spec(None, _shard_if(mesh, body[1], "model") if layer_tp else None)
     if name in ("bq", "bk", "bv"):
-        return spec(_shard_if(mesh, body[0], "model") if layer_tp else None)
+        heads = cfg.n_heads if name == "bq" else (cfg.n_kv or cfg.n_heads)
+        b_ax = ("model" if layer_tp
+                and heads % _axis_size(mesh, "model") == 0 else None)
+        return spec(_shard_if(mesh, body[0], b_ax))
     if name == "conv":
         return spec(None, _shard_if(mesh, body[1], "model") if layer_tp else None)
     if name in ("lam", "a_log", "dt_bias", "d_skip"):
@@ -194,11 +210,50 @@ def param_spec(mesh, cfg, path: str, shape: tuple,
 
 def params_shardings(mesh, cfg, params_shape: Any,
                      opts: ShardingOptions = BASELINE):
-    """Map a params (or optimizer-moment) shape-pytree to NamedShardings."""
+    """Map a params (or optimizer-moment) shape-pytree to NamedShardings.
+
+    Axis rules are membership-checked (``_shard_if``), so the same policy
+    serves every mesh family: the production ``("data", "model")`` /
+    ``("pod", "data", "model")`` meshes AND the scenario-grid
+    ``("cells", "model")`` mesh -- on the latter, weights replicate across
+    the cells axis (each cell group holds a full replica) while their
+    head/FFN/vocab dims split over the per-cell model axis.
+    """
     def fn(path, leaf):
         spec = param_spec(mesh, cfg, _path_str(path), leaf.shape, opts)
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def place_params(mesh, cfg, params, opts: ShardingOptions = BASELINE):
+    """``device_put`` a live params pytree with its policy shardings.
+
+    The serving stack's entry into tensor parallelism: placing the weights
+    once is enough for GSPMD to propagate the model axis through jitted
+    prefill/decode (activation constraints via ``repro.shardctx`` refine
+    the layout but are not required for correctness).
+    """
+    return jax.tree.map(jax.device_put, params,
+                        params_shardings(mesh, cfg, params, opts))
+
+
+def shard_ctx(mesh, fn):
+    """Wrap a jitted entry point so every call runs under ``mesh`` and its
+    activation-sharding context (``repro.shardctx``) -- the constraints
+    bake in at trace time, i.e. the first call per input shape.
+
+    ``mesh=None`` returns ``fn`` unchanged, so callers can thread an
+    optional mesh without branching.  Shared by the serving stack
+    (ServingEngine, PartitionedLM).
+    """
+    if mesh is None:
+        return fn
+    from ..shardctx import activation_sharding
+
+    def wrapped(*args):
+        with mesh, activation_sharding(mesh):
+            return fn(*args)
+    return wrapped
 
 
 def batch_shardings(mesh, cfg, batch_shape: Any, *, shard_batch=True):

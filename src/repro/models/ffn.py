@@ -37,6 +37,10 @@ def _ffn_block(p, cfg, x):
         h = jax.nn.silu(h) * (x @ p["w3"])
     else:
         h = jax.nn.gelu(h)
+    # Pin the hidden's TP layout (w1/w3 are column-, w2 row-sharded on the
+    # "model" axis): keeps the gate/activation elementwise ops partitioned
+    # instead of letting GSPMD gather the (tokens, d_ff) hidden.
+    h = shardctx.constrain(h, "dp", *([None] * (h.ndim - 2)), "tp")
     return h @ p["w2"]
 
 

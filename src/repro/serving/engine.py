@@ -65,8 +65,20 @@ def _bucket_ladder(s_max: int, lo: int = 8) -> tuple[int, ...]:
 
 
 class ServingEngine:
+    """``mesh=`` (any mesh with a ``"model"`` axis, e.g.
+    ``launch.mesh.make_cells_mesh(model=M)``) turns on tensor parallelism:
+    params are placed with the ``launch.sharding`` policy and the jitted
+    prefill/decode trace under the mesh's activation-sharding context, so
+    GSPMD splits attention heads / FFN hidden / vocab M ways.  Model-sharded
+    serving produces the same greedy tokens as the unsharded engine
+    (tests/test_model_axis.py pins it, ragged batches included)."""
+
     def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 128,
-                 prefill_buckets=None, recorder=None):
+                 prefill_buckets=None, recorder=None, mesh=None):
+        self.mesh = mesh
+        if mesh is not None:
+            from ..launch.sharding import place_params
+            params = place_params(mesh, cfg, params)
         self.cfg, self.params = cfg, params
         self.slots = slots
         self.s_max = s_max
@@ -85,11 +97,12 @@ class ServingEngine:
         self.cache = None
         # (slots, width, ragged?) triples traced so far == jit compilations
         self._prefill_shapes: set[tuple] = set()
-        self._decode = jax.jit(
-            lambda cache, toks: transformer.decode_step(params, cfg, cache, toks))
-        self._prefill = jax.jit(
+        from ..launch.sharding import shard_ctx
+        self._decode = shard_ctx(mesh, jax.jit(
+            lambda cache, toks: transformer.decode_step(params, cfg, cache, toks)))
+        self._prefill = shard_ctx(mesh, jax.jit(
             lambda batch, pad: transformer.prefill(params, cfg, batch,
-                                                   s_max=s_max, pad=pad))
+                                                   s_max=s_max, pad=pad)))
 
     @property
     def prefill_compiles(self) -> int:

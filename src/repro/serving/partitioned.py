@@ -9,6 +9,14 @@ slot from the arch's layer profile (profiling/lmprofiles.py).
 
 Cuts are restricted to unit boundaries (the block-scan granularity);
 ``layer_cut_to_unit`` maps a profile-layer cut onto the nearest unit cut.
+
+``mesh=`` activates intra-tier tensor parallelism: on a mesh with a
+``"model"`` axis (e.g. ``launch.mesh.make_cells_mesh(model=M)``) each
+half's weights are placed with the ``launch.sharding`` policy -- attention
+heads and FFN hidden dims split M ways -- so the UE and ES halves both
+exploit per-cell model parallelism while the boundary activation (psi)
+stays replicated across the model axis.  Model-sharded inference matches
+the unsharded single-device result (tests/test_model_axis.py).
 """
 from __future__ import annotations
 
@@ -47,14 +55,22 @@ class PartitionedLM:
     the controller keeps those archs at unit-boundary cuts of the main
     stack; DESIGN §4)."""
 
-    def __init__(self, cfg: ArchConfig, params, cut_unit: int):
+    def __init__(self, cfg: ArchConfig, params, cut_unit: int, *, mesh=None):
         assert not cfg.enc_layers and not cfg.tail_pattern, \
             "partitioned demo supports plain-stack archs"
         self.cfg = cfg
         self.cut_unit = int(cut_unit)
+        self.mesh = mesh
         self.ue_params, self.es_params = split_params(params, self.cut_unit)
-        self._ue = jax.jit(functools.partial(self._ue_half, cfg=cfg))
-        self._es = jax.jit(functools.partial(self._es_half, cfg=cfg))
+        if mesh is not None:
+            from ..launch.sharding import place_params
+            self.ue_params = place_params(mesh, cfg, self.ue_params)
+            self.es_params = place_params(mesh, cfg, self.es_params)
+        from ..launch.sharding import shard_ctx
+        self._ue = shard_ctx(mesh, jax.jit(
+            functools.partial(self._ue_half, cfg=cfg)))
+        self._es = shard_ctx(mesh, jax.jit(
+            functools.partial(self._es_half, cfg=cfg)))
 
     @staticmethod
     def _run_units(units, cfg, x, positions):

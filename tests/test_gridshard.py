@@ -3,14 +3,25 @@ mask, and sharded-vs-unsharded rollout parity.
 
 Tier-1 runs these on one device (padding forced via ``pad_to``); CI adds a
 forced-multi-device CPU leg (``XLA_FLAGS=--xla_force_host_platform_
-device_count=8``) where the same tests exercise real 8-way partitioning,
-including an uneven B=6 grid.
+device_count=8``) where the same tests exercise real 8-way partitioning --
+including an uneven B=6 grid and, through the ``model`` parametrizations,
+the 2-D ``("cells", "model")`` mesh with per-cell tensor parallelism
+(``model ∈ {1, 2, 4}``; degrees not dividing the device count skip).
+
+The parity suite iterates the ENTIRE scenario registry: a newly registered
+scenario is covered automatically (every constructor must build with zero
+args -- see docs/scenarios.md), at an uneven B so the padding path always
+runs.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import NamedSharding
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import gridshard
 from repro.core import scenarios as sc
@@ -19,11 +30,24 @@ from repro.launch.mesh import make_cells_mesh
 
 N_DEV = len(jax.devices())
 
+# Per-cell tensor-parallel degrees; a degree that does not divide the live
+# device count cannot build its ("cells", "model") mesh and skips (tier-1's
+# single device runs model=1 only).  The CI forced-8-device matrix narrows
+# each leg to ONE degree via REPRO_MODEL_DEGREES so the legs split the work
+# instead of triple-running it.
+MODEL_DEGREES = [
+    pytest.param(m, marks=pytest.mark.skipif(
+        N_DEV % m != 0, reason=f"model={m} needs a device count "
+                               f"divisible by it (have {N_DEV})"))
+    for m in (int(x) for x in
+              os.environ.get("REPRO_MODEL_DEGREES", "1,2,4").split(","))
+]
 
-def _forced_pad_to(b: int) -> int | None:
-    """Padded width that guarantees pad > 0 on any device count."""
-    natural = -(-b // N_DEV) * N_DEV
-    return natural + N_DEV if natural == b else None
+
+def _forced_pad_to(b: int, shards: int = N_DEV) -> int | None:
+    """Padded width that guarantees pad > 0 on any cell-shard count."""
+    natural = -(-b // shards) * shards
+    return natural + shards if natural == b else None
 
 
 # ---------------------------------------------------------------------------
@@ -182,6 +206,161 @@ def test_sharded_parity_random_policy():
     b = 5
     g = _assert_parity(b, _forced_pad_to(b), "random")
     assert g.gridshard.pad > 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction validates up front (no opaque XLA errors)
+# ---------------------------------------------------------------------------
+
+def test_make_cells_mesh_validates_device_count():
+    with pytest.raises(ValueError, match="force_host_platform_device_count"):
+        make_cells_mesh(2 * N_DEV)
+    with pytest.raises(ValueError, match="at least one device"):
+        make_cells_mesh(0)
+
+
+def test_make_cells_mesh_validates_model_axis():
+    with pytest.raises(ValueError, match="does not divide"):
+        make_cells_mesh(N_DEV, model=3 * N_DEV)
+    with pytest.raises(ValueError, match="model axis size"):
+        make_cells_mesh(N_DEV, model=0)
+
+
+def test_use_mesh_rejects_model_mesh_mismatch():
+    cells = sc.multicell_grid(cells=2, ues=3, seed=0)
+    with pytest.raises(ValueError, match="model"):
+        sc.ScenarioGrid(cells).use_mesh(make_cells_mesh(), model=2 * N_DEV)
+
+
+@pytest.mark.parametrize("model", MODEL_DEGREES)
+def test_use_mesh_model_places_2d(model):
+    """use_mesh(model=M) builds the ("cells","model") mesh itself and the
+    plan records the per-cell TP degree; params leaves whose post-cell dim
+    divides M shard over the model axis, the rest replicate across it."""
+    cells = sc.multicell_grid(cells=3, ues=4, seed=5)
+    g = sc.ScenarioGrid(cells).use_mesh(model=model)
+    gs = g.gridshard
+    assert gs.n_model == model
+    assert gs.n_shards == N_DEV // model
+    for leaf in jax.tree.leaves(g._run_params):
+        assert leaf.shape[0] == g.b_run
+        spec = leaf.sharding.spec
+        assert spec[0] == "cells"
+        if model > 1 and leaf.ndim > 1 and leaf.shape[1] % model == 0:
+            assert spec[1] == "model", leaf.shape
+    if model > 1:
+        # the N=4 UE axis divides every tested degree: TP is actually on
+        n_specs = [leaf.sharding.spec for leaf in
+                   jax.tree.leaves(g._run_params) if leaf.ndim > 1]
+        assert any(s[1] == "model" for s in n_specs)
+
+
+# ---------------------------------------------------------------------------
+# Registry-wide sharded parity: EVERY registered scenario, any model degree
+# ---------------------------------------------------------------------------
+
+_REG_STEPS = 6
+_REG_B = 3                     # uneven on most shard counts -> padding runs
+_plain_summaries: dict = {}
+
+
+def _registry_cells(name: str):
+    """B zero-arg cells of one registered scenario (per-cell randomness
+    still differs through the grid's fold_in key discipline)."""
+    return [sc.make(name) for _ in range(_REG_B)]
+
+
+def _plain_summary(name: str):
+    if name not in _plain_summaries:
+        g = sc.ScenarioGrid(_registry_cells(name))
+        _, _, summary = g.rollout("oracle", steps=_REG_STEPS, seed=3)
+        _plain_summaries[name] = {k: np.asarray(v)
+                                  for k, v in summary.items()}
+    return _plain_summaries[name]
+
+
+@pytest.mark.parametrize("model", MODEL_DEGREES)
+@pytest.mark.parametrize("name", sc.names())
+def test_registry_sharded_parity(name, model):
+    """sharded(cells, model) == unsharded to 1e-5 for every registered
+    scenario, uneven-B padding included -- the headline model-axis
+    guarantee.  Registering a new scenario extends this suite for free."""
+    mesh = make_cells_mesh(model=model)
+    shards = N_DEV // model
+    g = sc.ScenarioGrid(_registry_cells(name)).use_mesh(
+        mesh, pad_to=_forced_pad_to(_REG_B, shards))
+    assert g.gridshard.pad > 0          # the padding path always exercised
+    assert g.gridshard.n_model == model
+    _, _, summary = g.rollout("oracle", steps=_REG_STEPS, seed=3)
+    want = _plain_summary(name)
+    assert set(summary) == set(want)
+    for key in want:
+        got = np.asarray(summary[key])
+        assert got.shape == (_REG_B,)
+        np.testing.assert_allclose(got, want[key], rtol=1e-5, atol=1e-7,
+                                   err_msg=f"{name}[{key}] model={model}")
+
+
+def test_registry_constructors_build_with_zero_args():
+    """The contract the registry-wide suite relies on: every registered
+    constructor yields a Scenario with no arguments."""
+    for name in sc.names():
+        cell = sc.make(name)
+        assert isinstance(cell, sc.Scenario), name
+        assert cell.n_ue >= 1, name
+
+
+# ---------------------------------------------------------------------------
+# Layout round-trip property (hypothesis; fixed-examples shim on bare envs)
+# ---------------------------------------------------------------------------
+
+class TestLayoutRoundTrip:
+    """pad_cells -> place -> unpad is the identity and the validity mask is
+    padding-invariant, for arbitrary (B, cells, model) leaf shapes."""
+
+    @pytest.mark.parametrize("model", MODEL_DEGREES)
+    @given(b=st.integers(1, 9), extra=st.integers(0, 2),
+           k=st.integers(1, 6))
+    @settings(max_examples=12, deadline=None)
+    def test_pad_place_unpad_identity(self, model, b, extra, k):
+        mesh = make_cells_mesh(model=model)
+        shards = N_DEV // model
+        natural = -(-b // shards) * shards
+        gs = gridshard.plan(b, mesh, pad_to=natural + extra * shards)
+        rng = np.random.default_rng(b * 100 + extra * 10 + k)
+        tree = {
+            "vec": jnp.asarray(rng.normal(size=(b,)).astype(np.float32)),
+            "mat": jnp.asarray(rng.normal(size=(b, k)).astype(np.float32)),
+            "cube": jnp.asarray(
+                rng.normal(size=(b, k, 3)).astype(np.float32)),
+            "scalar": jnp.float32(1.5),
+        }
+        placed = gridshard.place(gridshard.pad_cells(tree, gs), gs)
+        for key, leaf in placed.items():
+            if leaf.ndim:
+                assert leaf.shape[0] == gs.b_padded, key
+        back = gridshard.unpad(placed, gs)
+        for key in tree:
+            np.testing.assert_array_equal(np.asarray(back[key]),
+                                          np.asarray(tree[key]), err_msg=key)
+        mask = np.asarray(gs.mask())
+        assert mask.sum() == b and mask[:b].all()
+
+    @pytest.mark.parametrize("model", MODEL_DEGREES)
+    @given(b=st.integers(1, 6), extra=st.integers(1, 3))
+    @settings(max_examples=8, deadline=None)
+    def test_mask_is_padding_invariant(self, model, b, extra):
+        """The first b mask entries are True at ANY padded width: widening
+        the pad never flips a real cell's validity."""
+        mesh = make_cells_mesh(model=model)
+        shards = N_DEV // model
+        natural = -(-b // shards) * shards
+        narrow = gridshard.plan(b, mesh)
+        wide = gridshard.plan(b, mesh, pad_to=natural + extra * shards)
+        m_n, m_w = np.asarray(narrow.mask()), np.asarray(wide.mask())
+        np.testing.assert_array_equal(m_w[:len(m_n)][:b], m_n[:b])
+        assert m_n.sum() == m_w.sum() == b
+        assert not m_w[b:].any()
 
 
 # ---------------------------------------------------------------------------

@@ -39,10 +39,21 @@ def test_param_spec_baseline_rules():
 
 def test_param_spec_non_divisible_replicates():
     cfg = get_config("gemma3-1b")         # 4 heads * 256 = 1024 cols; d=1152
+    # Head-granular TP: gemma3's 4 query heads (and 1 kv head) cannot split
+    # over a 16-way model axis, so the projections replicate even though
+    # their flat column counts (1024, 256) divide 16 -- a mid-head split
+    # breaks per-head ops (RoPE, qk-norm, GQA grouping).
     spec = param_spec(MESH, cfg, "units/slot0/attn/wq", (4, 1152, 1024))
-    assert spec == P(None, None, "model")   # 1024 % 16 == 0
+    assert spec == P(None, None, None)
     spec = param_spec(MESH, cfg, "units/slot0/attn/wk", (4, 1152, 256))
-    assert spec == P(None, None, "model")
+    assert spec == P(None, None, None)
+    assert param_spec(MESH, cfg, "units/slot0/attn/wo", (4, 1024, 1152)) \
+        == P(None, None, None)
+    # head-aligned counts DO shard: qwen1.5's 8 kv heads on 8-way would,
+    # but on this 16-way mesh 8 % 16 != 0 -> replicated too
+    cfg_q = get_config("qwen1.5-110b")
+    assert param_spec(MESH, cfg_q, "units/slot0/attn/wk", (80, 8192, 1024)) \
+        == P(None, "data", None)
     # d_model 1152 not divisible by 16 on the fsdp side (fsdp=False anyway)
     assert param_spec(MESH, cfg, "final_norm", (1152,)) == P(None)
 

@@ -1,0 +1,182 @@
+"""Per-cell tensor parallelism for the serving stack: model-sharded params
+through ``PartitionedLM`` and ``ServingEngine`` match the unsharded
+single-device run.
+
+Degrees come from the live device count: tier-1's single device runs the
+``model=1`` (degenerate placement) legs; the CI forced-8-device job runs
+``model ∈ {1, 2, 4}`` with real GSPMD head/FFN splits.
+
+The contract mirrors docs/serving.md's ragged one: greedy tokens are pinned
+IDENTICAL (bit-for-bit at the token level), logits to 1e-5 -- sharding a
+matmul's contraction over the model axis changes float-summation order
+(psum of partials), so raw logits differ at ~1e-7, exactly like padding
+does.  The recurrent engine leg drives mixed-length prompts, so PR 4's
+reset-aware scans and pad masks run UNDER model sharding.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.kernels import ops
+from repro.launch.mesh import make_cells_mesh
+from repro.launch.sharding import place_params
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.partitioned import PartitionedLM
+
+N_DEV = len(jax.devices())
+TOL = dict(rtol=1e-5, atol=1e-5)   # as tests/test_ragged.py: float-sum order
+
+# REPRO_MODEL_DEGREES narrows the degrees per CI matrix leg (see
+# tests/test_gridshard.py); unset, every degree dividing N_DEV runs.
+MODEL_DEGREES = [
+    pytest.param(m, marks=pytest.mark.skipif(
+        N_DEV % m != 0, reason=f"model={m} needs a device count "
+                               f"divisible by it (have {N_DEV})"))
+    for m in (int(x) for x in
+              os.environ.get("REPRO_MODEL_DEGREES", "1,2,4").split(","))
+]
+
+
+def _hybrid_grs():
+    """Mixed attention + RG-LRU + SSD stack, no tail (PartitionedLM-able)."""
+    return dataclasses.replace(
+        reduced(get_config("mamba2-1.3b")),
+        name="hybrid-grs-tp-smoke", block_pattern=("g", "r", "s"),
+        n_layers=6, n_heads=4, n_kv=2, head_dim=16, d_ff=128, rnn_width=32)
+
+
+CONFIGS = {
+    "attention": lambda: reduced(get_config("qwen3-0.6b")),
+    "recurrent": _hybrid_grs,
+}
+
+
+@pytest.fixture(scope="module", params=sorted(CONFIGS))
+def arch(request):
+    cfg = CONFIGS[request.param]()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Placement: the model axis lands on head/FFN weight dims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(N_DEV < 2 or N_DEV % 2, reason="needs >= 2 devices")
+def test_place_params_shards_weights_over_model_axis():
+    cfg = CONFIGS["attention"]()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = make_cells_mesh(model=2)
+    placed = place_params(mesh, cfg, params)
+    wq = placed["units"]["slot0"]["attn"]["wq"]
+    w1 = placed["units"]["slot0"]["ffn"]["w1"]
+    assert wq.sharding.spec[-1] == "model"       # heads dim split
+    assert w1.sharding.spec[-1] == "model"       # FFN hidden dim split
+    # nothing shards over "cells": each cell group holds a full replica
+    for leaf in jax.tree.leaves(placed):
+        assert "cells" not in tuple(leaf.sharding.spec)
+
+
+# ---------------------------------------------------------------------------
+# PartitionedLM: UE/ES halves under per-cell TP
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", MODEL_DEGREES)
+def test_partitioned_lm_model_sharded_matches_unsharded(arch, model):
+    cfg, params = arch
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    plain = PartitionedLM(cfg, params, 1)
+    lg_p, hid_p = plain.infer(toks)
+    shard = PartitionedLM(cfg, params, 1, mesh=make_cells_mesh(model=model))
+    lg_s, hid_s = shard.infer(toks)
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_p), **TOL)
+    np.testing.assert_allclose(np.asarray(hid_s).astype(np.float32),
+                               np.asarray(hid_p).astype(np.float32), **TOL)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lg_s, -1)),
+                                  np.asarray(jnp.argmax(lg_p, -1)))
+    if model == 1:
+        # no contraction is split: the degenerate placement is bitwise
+        np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_p))
+
+
+@pytest.mark.parametrize("model", MODEL_DEGREES)
+def test_partitioned_lm_full_offload_sharded(arch, model):
+    """cut_unit=0 (everything on the ES tier) under model sharding."""
+    cfg, params = arch
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 9), 0, cfg.vocab)
+    lg_p, _ = PartitionedLM(cfg, params, 0).infer(toks)
+    lg_s, boundary = PartitionedLM(
+        cfg, params, 0, mesh=make_cells_mesh(model=model)).infer(toks)
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_p), **TOL)
+    np.testing.assert_array_equal(np.asarray(boundary), np.asarray(toks))
+
+
+# ---------------------------------------------------------------------------
+# Engine: ragged prefill + decode under model sharding
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, prompts, mesh=None):
+    eng = ServingEngine(cfg, params, slots=len(prompts), s_max=64, mesh=mesh)
+    reqs = [Request(rid=i, prompt=p, max_new=4)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_idle()
+    assert len(done) == len(prompts)
+    return [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("model", MODEL_DEGREES)
+def test_engine_model_sharded_ragged_parity(model):
+    """Mixed-length prompts through a model-sharded recurrent engine give
+    the exact greedy tokens of the unsharded engine -- PR 4's ragged/reset
+    machinery (pad-zeroed convs, reset-aware scans, masked attention) all
+    running partitioned."""
+    cfg = reduced(get_config("recurrentgemma-2b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 9, 12)]
+    want = _run_engine(cfg, params, prompts)
+    got = _run_engine(cfg, params, prompts,
+                      mesh=make_cells_mesh(model=model))
+    assert got == want
+
+
+@pytest.mark.parametrize("model", MODEL_DEGREES)
+def test_engine_model_sharded_attention_parity(model):
+    cfg = CONFIGS["attention"]()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (4, 11)]
+    want = _run_engine(cfg, params, prompts)
+    got = _run_engine(cfg, params, prompts,
+                      mesh=make_cells_mesh(model=model))
+    assert got == want
+
+
+@pytest.mark.slow
+def test_engine_model_sharded_parity_pallas_path():
+    """Interpreted-Pallas dispatch under the largest buildable TP degree:
+    the kernel bodies themselves run on model-sharded operands."""
+    model = max((m for m in (1, 2, 4) if N_DEV % m == 0), default=1)
+    cfg = reduced(get_config("recurrentgemma-2b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (6, 10)]
+    ops.set_impl("pallas", interpret=True)
+    try:
+        want = _run_engine(cfg, params, prompts)
+        got = _run_engine(cfg, params, prompts,
+                          mesh=make_cells_mesh(model=model))
+    finally:
+        ops.set_impl("auto")
+    assert got == want
