@@ -1,10 +1,16 @@
 """Benchmark harness entry point (deliverable d): one experiment per paper
-figure + kernel micro-benchmarks + the roofline table.
+figure + kernel micro-benchmarks + the serving-engine A/B + the roofline
+table.
 
-Prints ``name,us_per_call,derived`` CSV per experiment, as required.
+Prints ``name,us_per_call,derived`` CSV per experiment, as required, and
+writes the canonical ``BENCH_N.json`` perf-trajectory artifact at the repo
+root (currently ``BENCH_6.json``: continuous-vs-sync serving latency --
+p50/p99 replay latency, goodput, slot-steps/sec, prefill-compile counts
+from BOTH engine modes; see benchmarks/serving_latency.py).
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -57,6 +63,16 @@ def main() -> None:
     from . import kernels_micro
     for name, us, derived in kernels_micro.bench_all():
         _row(f"kernel[{name}]", us, derived)
+
+    # -- serving engine A/B (continuous vs sync) + BENCH_6.json ----------------
+    from . import serving_latency
+    payload = serving_latency.bench_all()
+    for name, us, derived in serving_latency.rows(payload):
+        _row(name, us, derived)
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_6.json")
+    with open(bench_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    _row("bench_json", 0.0, f"wrote={os.path.normpath(bench_path)}")
 
     # -- roofline (from dry-run artifacts; skip silently if sweep not run) -----
     from . import roofline

@@ -1,0 +1,196 @@
+"""Engine A/B latency benchmark: continuous batching vs the synchronized
+compat mode, under the traffic subsystem's bursty arrival processes.
+
+  PYTHONPATH=src python -m benchmarks.serving_latency --json BENCH_6.json
+
+The experiment the paged-KV engine exists for: materialize a bursty arrival
+process (``flash_crowd``: quiet base + spike with exponential decay;
+``mmpp_burst``: 2-state MMPP), draw one deterministic request schedule from
+it (heterogeneous prompt lengths AND decode budgets -- the mix that makes
+head-of-line blocking visible), and replay the IDENTICAL schedule through
+
+* the continuous engine (per-tick admission, paged KV, preemption), and
+* ``sync_batching=True`` (admission waits for every slot to drain),
+
+at equal slot count.  The ``TrafficRecorder`` clocks both runs on the same
+tick base, so p50/p99 submit->complete latency, goodput (completed requests
+per tick), and slot-steps/sec are directly comparable; per-request greedy
+outputs are asserted IDENTICAL across the two engines (same model, same
+schedule -- the engines may only differ in *when*, never *what*).
+
+CSV rows follow the benchmarks/run.py convention; ``--json`` additionally
+writes the canonical ``BENCH_6.json`` perf-trajectory artifact with both
+engines' numbers per workload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def make_schedule(workload: str, n_ue: int, ticks: int, seed: int,
+                  vocab: int):
+    """Deterministic (tick, rid, prompt, max_new, ue) request schedule drawn
+    from a traffic-subsystem arrival process."""
+    import jax
+    import jax.numpy as jnp
+    from repro import traffic
+
+    if workload == "flash_crowd":
+        proc = traffic.FlashCrowd(
+            base=jnp.full((n_ue,), 0.08), spike=jnp.asarray(2.5),
+            t0=jnp.asarray(ticks // 4, jnp.int32),
+            decay=jnp.asarray(ticks / 6.0))
+        rates = traffic.materialize(proc, ticks, jax.random.PRNGKey(seed))
+    elif workload == "mmpp_burst":
+        proc = traffic.make_mmpp(n_ue, seed=seed, rates=(0.05, 1.2),
+                                 horizon=ticks)
+        rates = traffic.materialize(proc, ticks, jax.random.PRNGKey(seed))
+    else:
+        raise ValueError(f"unknown workload {workload!r}")
+
+    rng = np.random.default_rng(seed)
+    counts = rng.poisson(np.asarray(rates))            # (T, N) arrivals
+    schedule, rid = [], 0
+    for t in range(ticks):
+        for ue in range(n_ue):
+            for _ in range(int(counts[t, ue])):
+                n = int(rng.integers(4, 11))
+                schedule.append((t, rid,
+                                 rng.integers(0, vocab, n).astype(np.int32),
+                                 int(rng.integers(2, 9)), ue))
+                rid += 1
+    return schedule
+
+
+def replay(cfg, params, schedule, *, sync: bool, slots: int, s_max: int,
+           max_ticks: int = 5000) -> dict:
+    """Feed the schedule into one engine; return latency + throughput stats
+    and the per-request outputs (for the cross-engine parity check)."""
+    from repro.serving.engine import Request, ServingEngine
+    from repro.traffic import TrafficRecorder
+
+    rec = TrafficRecorder()
+    eng = ServingEngine(cfg, params, slots=slots, s_max=s_max,
+                        recorder=rec, sync_batching=sync)
+    reqs = [Request(rid=rid, prompt=prompt, max_new=max_new, ue=ue)
+            for _, rid, prompt, max_new, ue in schedule]
+    pending = list(zip((t for t, *_ in schedule), reqs))
+
+    t0 = time.perf_counter()
+    i = 0
+    for _ in range(max_ticks):
+        while i < len(pending) and pending[i][0] <= eng.clock:
+            eng.submit(pending[i][1])
+            i += 1
+        busy = eng.step()
+        if i == len(pending) and not busy:
+            break
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs), "schedule did not drain"
+
+    lat = rec.latency_stats()
+    ticks = eng.clock
+    return {
+        "engine": "sync" if sync else "continuous",
+        "requests": len(reqs),
+        "ticks": int(ticks),
+        "wall_s": round(wall, 4),
+        "latency_ticks": lat,
+        "goodput_req_per_tick": round(len(reqs) / max(ticks, 1), 4),
+        "slot_steps_per_s": round(eng.decode_steps * slots / max(wall, 1e-9)),
+        "decode_steps": int(eng.decode_steps),
+        "prefill_compiles": int(eng.prefill_compiles),
+        "preemptions": int(eng.preemptions),
+        "_outputs": [list(r.out) for r in reqs],
+    }
+
+
+def bench_all(*, slots: int = 2, s_max: int = 32, ticks: int = 48,
+              n_ue: int = 4, seed: int = 0, n_layers: int = 4) -> dict:
+    """Both engines x both workloads on a reduced attention stack.  Returns
+    the BENCH_6 payload (outputs stripped, parity recorded as a bool)."""
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import transformer
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=n_layers)
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+
+    out = {"bench": 6,
+           "config": {"arch": cfg.name, "n_layers": n_layers, "slots": slots,
+                      "s_max": s_max, "ticks": ticks, "n_ue": n_ue,
+                      "seed": seed},
+           "workloads": {}}
+    for workload in ("flash_crowd", "mmpp_burst"):
+        sched = make_schedule(workload, n_ue, ticks, seed, cfg.vocab)
+        cont = replay(cfg, params, sched, sync=False, slots=slots,
+                      s_max=s_max)
+        sync = replay(cfg, params, sched, sync=True, slots=slots,
+                      s_max=s_max)
+        match = cont.pop("_outputs") == sync.pop("_outputs")
+        p99_c = cont["latency_ticks"]["p99"]
+        p99_s = sync["latency_ticks"]["p99"]
+        out["workloads"][workload] = {
+            "continuous": cont, "sync": sync,
+            "outputs_match": bool(match),
+            "p99_speedup": round(p99_s / max(p99_c, 1e-9), 3),
+        }
+    return out
+
+
+def rows(payload: dict):
+    """Flatten the payload into benchmarks/run.py CSV rows."""
+    for workload, w in payload["workloads"].items():
+        for mode in ("continuous", "sync"):
+            r = w[mode]
+            lat = r["latency_ticks"]
+            yield (f"serving_latency[{workload}:{mode}]",
+                   r["wall_s"] * 1e6 / max(r["ticks"], 1),
+                   f"p50={lat['p50']:.0f}t;p99={lat['p99']:.0f}t;"
+                   f"goodput={r['goodput_req_per_tick']:.2f}req/t;"
+                   f"slot_steps_per_s={r['slot_steps_per_s']};"
+                   f"prefill_compiles={r['prefill_compiles']};"
+                   f"preemptions={r['preemptions']}")
+        yield (f"serving_latency_ab[{workload}]", 0.0,
+               f"p99_speedup={w['p99_speedup']:.2f}x;"
+               f"outputs_match={'OK' if w['outputs_match'] else 'FAIL'}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--s-max", type=int, default=32)
+    ap.add_argument("--ticks", type=int, default=48)
+    ap.add_argument("--ues", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the BENCH_6.json payload here")
+    args = ap.parse_args(argv)
+
+    payload = bench_all(slots=args.slots, s_max=args.s_max, ticks=args.ticks,
+                        n_ue=args.ues, seed=args.seed)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows(payload):
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    ok = all(w["outputs_match"] for w in payload["workloads"].values())
+    crowd = payload["workloads"]["flash_crowd"]
+    improved = crowd["p99_speedup"] > 1.0
+    if not ok:
+        print("PARITY FAILURE: engines produced different tokens")
+    if not improved:
+        print("LATENCY REGRESSION: continuous p99 not better than sync "
+              "on flash_crowd")
+    return 0 if ok and improved else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

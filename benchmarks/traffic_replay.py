@@ -42,8 +42,14 @@ def _sync(tree):
     jax.block_until_ready(tree)
 
 
-def record_serving_trace(n_ue: int, ticks: int = 60, seed: int = 0):
-    """Drive a tiny ServingEngine under a bursty schedule; bin the submits."""
+def record_serving_trace(n_ue: int, ticks: int = 60, seed: int = 0,
+                         engine: str = "continuous"):
+    """Drive a tiny ServingEngine under a bursty schedule; bin the submits.
+
+    ``engine`` picks the serving mode: ``"continuous"`` (default -- per-tick
+    admission over the paged KV pool) or ``"sync"`` (the synchronized-batch
+    compat mode; benchmarks/serving_latency.py A/Bs the two head-to-head).
+    """
     from repro import traffic
     from repro.configs.base import get_config, reduced
     from repro.models import transformer
@@ -52,7 +58,8 @@ def record_serving_trace(n_ue: int, ticks: int = 60, seed: int = 0):
     cfg = reduced(get_config("qwen3-0.6b"), n_layers=4)
     params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
     rec = traffic.TrafficRecorder()
-    eng = ServingEngine(cfg, params, slots=2, s_max=32, recorder=rec)
+    eng = ServingEngine(cfg, params, slots=2, s_max=32, recorder=rec,
+                        sync_batching=(engine == "sync"))
 
     rng = np.random.default_rng(seed)
     rid = 0
@@ -69,7 +76,10 @@ def record_serving_trace(n_ue: int, ticks: int = 60, seed: int = 0):
     eng.run_until_idle()
     trace = rec.to_trace(n_ue=n_ue, bin_ticks=2, slot_s=1.0,
                          horizon=ticks // 2)
-    print(f"recorded {rid} requests over {eng.clock} engine ticks -> "
+    lat = rec.latency_stats()
+    print(f"recorded {rid} requests over {eng.clock} engine ticks "
+          f"({engine} engine, p50/p99 E2E "
+          f"{lat.get('p50', 0):.0f}/{lat.get('p99', 0):.0f} ticks) -> "
           f"trace T={trace.n_slots} x N={trace.n_ue}, "
           f"mean {trace.rates.mean():.2f} req/s, "
           f"peak {trace.rates.max():.2f} req/s")
@@ -158,6 +168,11 @@ def main(argv=None) -> int:
                     choices=("serving", "mmpp"),
                     help="record the trace from a live ServingEngine run "
                          "(the full loop) or materialize an MMPP process")
+    ap.add_argument("--engine", default="continuous",
+                    choices=("continuous", "sync"),
+                    help="serving mode for --source serving: continuous "
+                         "batching (paged KV) or the synchronized-batch "
+                         "compat mode")
     ap.add_argument("--save-trace", default=None, metavar="NPZ",
                     help="also save the recorded trace for reuse "
                          "(python -m repro.traffic --show NPZ)")
@@ -182,7 +197,8 @@ def main(argv=None) -> int:
     if args.devices:
         force_devices(args.devices)   # before jax initializes its backend
 
-    trace = (record_serving_trace(args.ues, seed=args.seed)
+    trace = (record_serving_trace(args.ues, seed=args.seed,
+                                  engine=args.engine)
              if args.source == "serving"
              else mmpp_trace(args.ues, seed=args.seed))
     if args.save_trace:

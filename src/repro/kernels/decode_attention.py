@@ -54,12 +54,26 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def decode_attention_pallas(q, k, v, *, valid_mask, k_block: int = 512,
                             interpret: bool = False):
-    """q (B,1,H,hd), k/v (B,S,KV,hd), valid_mask (B,S) -> (B,1,H,hd)."""
+    """q (B,1,H,hd), k/v (B,S,KV,hd), valid_mask (B,S) -> (B,1,H,hd).
+
+    Any cache length S is accepted: a ragged tail (S not a k_block
+    multiple) is padded wrapper-side up to the next block boundary with
+    ``valid_mask=False`` entries, which the in-kernel mask turns into
+    ``exp(-inf) == 0`` softmax terms -- same discipline the flash/scan
+    kernels use for pad columns, so paged caches with per-slot lengths
+    (serving/kvpool.py) need no host-side repacking.
+    """
     b, _, h, hd = q.shape
     _, s, kv, _ = k.shape
     g = h // kv
     k_block = min(k_block, s)
-    assert s % k_block == 0, "cache length must be a k_block multiple"
+    if s % k_block:
+        tail = k_block - s % k_block
+        wid = [(0, 0), (0, tail), (0, 0), (0, 0)]
+        k = jnp.pad(k, wid)
+        v = jnp.pad(v, wid)
+        valid_mask = jnp.pad(valid_mask, [(0, 0), (0, tail)])   # False tail
+        s += tail
     nk = s // k_block
 
     qr = q.reshape(b, kv, g, hd)

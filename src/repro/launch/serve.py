@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sync-batching", action="store_true",
+                    help="use the synchronized-batch compat engine instead "
+                         "of continuous batching (A/B baseline)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -50,7 +53,8 @@ def main():
     from ..shardctx import activation_sharding
     with mesh, activation_sharding(mesh):
         eng = ServingEngine(cfg, params, slots=args.slots,
-                            s_max=args.prompt_len + args.max_new + 8)
+                            s_max=args.prompt_len + args.max_new + 8,
+                            sync_batching=args.sync_batching)
         rng = np.random.default_rng(0)
         t_submit = {}
         reqs = []
@@ -73,7 +77,11 @@ def main():
             lat = (t_done.get(r.rid, time.time()) - t_submit[r.rid]) * 1e3
             print(f"  req {r.rid}: {len(r.out)} tokens, {lat:7.1f} ms, "
                   f"out[:4]={r.out[:4]}")
-        print(f"[serve] {len(reqs)} requests in {steps} engine steps")
+        mode = "sync" if args.sync_batching else "continuous"
+        print(f"[serve] {len(reqs)} requests in {steps} engine steps "
+              f"({mode}: {eng.decode_steps} decode dispatches, "
+              f"{eng.prefill_compiles} prefill compiles, "
+              f"{eng.preemptions} preemptions)")
 
 
 if __name__ == "__main__":

@@ -199,6 +199,66 @@ def decode_self_attention(p, cfg, x, cache, pos, *, kind: str, pad=None):
     return out @ p["wo"], new_cache
 
 
+def decode_self_attention_paged(p, cfg, x, cache, *, kind: str,
+                                block_table, seq_lens):
+    """Single-token decode against per-slot caches (continuous batching).
+
+    Unlike :func:`decode_self_attention` there is no shared write frontier
+    and no pad vector: each row ``i`` carries its own cache length
+    ``seq_lens[i]`` (the position being written) and the caches are
+    pad-free (see ``serving.kvpool.commit_prefill``).
+
+    * ``kind == "g"``: ``cache`` is a pool :class:`KVCache`
+      ``(n_blocks, block_size, KV, hd)``; ``block_table`` (B, M) maps each
+      row's logical block index to a pool block.  The new K/V scatters into
+      block ``block_table[i, seq_lens[i] // bs]`` at offset
+      ``seq_lens[i] % bs``; attention gathers the row's blocks back into a
+      contiguous ``(B, M*bs)`` view with positions ``> seq_lens[i]`` masked.
+      Idle rows (``seq_lens == 0``, table all zeros) write to the reserved
+      dummy block 0 -- harmless garbage nobody gathers as valid beyond
+      position 0, and their outputs are discarded by the engine.
+    * ``kind == "l"``: ``cache`` is a per-slot :class:`RingCache`; row
+      ``i`` writes its ring slot ``seq_lens[i] % window`` (semantic
+      positions -- commit re-slots prefill entries).
+    """
+    from ..kernels import ops
+    q = _project_q(p, cfg, x)               # (B, 1, H, hd)
+    k_new, v_new = _project_kv(p, cfg, x)   # (B, 1, KV, hd)
+    if cfg.rope_theta:
+        pvec = seq_lens[:, None]                    # (B, 1) per-row position
+        q = rope(q, pvec, cfg.rope_theta)
+        k_new = rope(k_new, pvec, cfg.rope_theta)
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+    b = x.shape[0]
+    rows = jnp.arange(b)
+
+    if kind == "l":
+        w = cache.k.shape[1]
+        slot = seq_lens % w                                  # (B,)
+        k = cache.k.at[rows, slot].set(k_new[:, 0])
+        v = cache.v.at[rows, slot].set(v_new[:, 0])
+        pos_buf = cache.pos.at[rows, slot].set(seq_lens)
+        valid = (pos_buf >= 0) & (pos_buf >= (seq_lens - w + 1)[:, None])
+        out = ops.decode_attention(q, k, v, valid_mask=valid)
+        new_cache = RingCache(k=k, v=v, pos=pos_buf)
+    else:
+        bs = cache.k.shape[1]                                # block_size
+        m = block_table.shape[1]
+        blk = block_table[rows, seq_lens // bs]              # (B,) pool ids
+        off = seq_lens % bs
+        k = cache.k.at[blk, off].set(k_new[:, 0])
+        v = cache.v.at[blk, off].set(v_new[:, 0])
+        kvh, hd = k.shape[-2:]
+        k_rows = k[block_table].reshape(b, m * bs, kvh, hd)
+        v_rows = v[block_table].reshape(b, m * bs, kvh, hd)
+        valid = jnp.arange(m * bs)[None, :] <= seq_lens[:, None]
+        out = ops.decode_attention(q, k_rows, v_rows, valid_mask=valid)
+        new_cache = KVCache(k=k, v=v)
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"], new_cache
+
+
 def decode_cross_attention(p, cfg, x, context_cache):
     q = _project_q(p, cfg, x)
     k, v = context_cache

@@ -402,3 +402,59 @@ def decode_step(params, cfg, caches, tokens):
     if pad is not None:
         new_caches["pad"] = pad
     return logits, new_caches
+
+
+def _layer_decode_paged(p, cfg, kind, x, cache, block_table, seq_lens):
+    """Single-token layer step with per-slot cache positions.  Recurrent
+    kinds keep per-row O(1) state, so they are position-free and reuse the
+    synchronized step; attention kinds go through the paged/per-slot path.
+    """
+    if kind in ("s", "r"):
+        return _layer_decode(p, cfg, kind, x, cache, None)
+    akind = "l" if kind == "l" else "g"
+    normed = rms_norm(x, p["norm1"])
+    out, cache = attn.decode_self_attention_paged(
+        p["attn"], cfg, normed, cache, kind=akind,
+        block_table=block_table, seq_lens=seq_lens)
+    x = x + out
+    if kind == "m":
+        y, _ = ffn_mod.apply_moe(p["moe"], cfg, rms_norm(x, p["norm2"]))
+        x = x + y
+    else:
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+    return x, cache
+
+
+def decode_step_paged(params, cfg, caches, tokens, block_table, seq_lens):
+    """One continuous-batching decode step.  tokens: (B,) int32; ``caches``
+    is the pool state from ``serving.kvpool.init_decode_state`` (global KV
+    paged, ring/recurrent per-slot); ``block_table`` (B, M) int32 and
+    ``seq_lens`` (B,) int32 carry each slot's blocks and cache length --
+    there is no shared ``pos`` frontier and no pad vector.  Returns
+    (logits (B, V), caches).  Cross-attention kinds are not servable here
+    (see ``kvpool._check_pattern``)."""
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    x = params["embed"][tokens][:, None, :].astype(dtype_of(cfg.compute_dtype))
+
+    def scan_body(x, inp):
+        unit_p, unit_c = inp
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c = _layer_decode_paged(unit_p[f"slot{i}"], cfg, kind, x,
+                                       unit_c[f"slot{i}"], block_table,
+                                       seq_lens)
+            new_c[f"slot{i}"] = c
+        return x, new_c
+
+    x, new_unit_caches = jax.lax.scan(
+        scan_body, x, (params["units"], caches["units"]))
+
+    new_tail = []
+    for tp, kind, tc in zip(params.get("tail", []), cfg.tail_pattern,
+                            caches["tail"]):
+        x, c = _layer_decode_paged(tp, cfg, kind, x, tc, block_table,
+                                   seq_lens)
+        new_tail.append(c)
+
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"units": new_unit_caches, "tail": new_tail}

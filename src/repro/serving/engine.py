@@ -1,34 +1,52 @@
-"""Batched serving engine for the edge tier: continuous batching over fixed
-decode slots, KV-cache managed through the transformer cache pytree.
+"""Serving engine for the edge tier: continuous batching over a paged KV
+cache, with the old synchronized-batch engine kept as a compat mode.
 
-The ES side of the paper's system: requests (prompts) arrive continuously;
-the engine prefills them into free slots and steps all active slots together
-(synchronized decode).  Finished sequences free their slot for the next
-queued request.  Works on any decoder-only arch config.
+The ES side of the paper's system: requests (prompts) arrive continuously
+and the paper's E2E-delay objective is a *serial queuing model* -- so the
+default engine admits **per tick**: a queued request prefills into any free
+decode slot while the other slots keep decoding, and its KV lands in
+fixed-size blocks handed out by ``serving.kvpool.BlockAllocator`` (per-slot
+block tables, free-list reuse).  Each slot carries its own cache length
+(``seq_lens``) -- there is no shared write frontier -- and one jitted
+``transformer.decode_step_paged`` call advances every active slot, gathering
+each row's blocks through ``kernels/decode_attention`` with a per-row ragged
+``valid_mask``.  When a slot outgrows its blocks and the pool is exhausted,
+the **youngest** admitted request is preempted back to the front of the
+queue (its blocks freed, its output discarded); greedy decode is
+deterministic, so re-admission reproduces the same tokens and preemption is
+invisible to parity.  ``sync_batching=True`` restores the old engine --
+admission waits for ALL slots to drain and prompts share one batched
+prefill -- kept for A/B latency baselines and parity tests.
 
-Mixed-length prompt batches are EXACT on every stack kind: ``_admit``
-left-pads shorter prompts and hands the per-row pad counts to
-``transformer.prefill``, which masks the pad positions out of attention,
-shifts RoPE to each row's true token index, and (for recurrent "r"/"s"
-blocks) zeroes pad inputs ahead of the causal convs and resets the scan
-state at the pad boundary -- a padded prompt's tokens equal its solo run
-(pinned by tests/test_serving.py::test_engine_mixed_lengths_match_solo and
-tests/test_ragged.py for hybrid/SSM stacks on both dispatch paths).  See
-docs/serving.md for the full ragged-semantics contract.
+Mixed-length prompts are EXACT in both modes.  Continuous mode prefills
+each request SOLO (batch=1 at its bucket width, left-padded); the ragged
+machinery (attention pad mask + shifted RoPE + reset-aware recurrent scans)
+makes the bucket slack semantics-free, and ``kvpool.commit_prefill`` strips
+the pad when writing the KV blocks, so the paged cache holds only real
+tokens and decode needs no pad vector.  Sync mode batches the admitted
+prompts into one left-padded prefill whose pad vector rides in the cache.
+Either way a request's greedy tokens equal its solo run on every stack kind
+(tests/test_serving.py, tests/test_ragged.py, tests/test_model_axis.py).
 
 Prefill shapes are BUCKETED: prompts pad up to the next power-of-two width
 (``prefill_buckets``), so the jitted prefill compiles once per bucket --
 steady-state serving triggers no recompiles regardless of prompt-length mix
 (pinned by tests/test_serving.py::test_prefill_bucketing_avoids_recompiles).
-The pad mask makes the extra bucket padding semantics-free, and bucket
-selection never eats the decode budget (``bucket + max_new <= s_max``; see
-``_bucket_width``).  Pad-free batches skip the mask entirely and keep the
-dense/Pallas kernel prefill path.
+Bucket selection never eats the decode budget (``bucket + max_new <=
+s_max``; see ``_bucket_width``).  Pad-free prompts skip the mask entirely
+and keep the dense/Pallas kernel prefill path.
 
 A traffic recorder (duck-typed; see ``repro.traffic.recorder``) can observe
 the request lifecycle: the engine reports submit/admit/complete in units of
 its step clock (one ``step()`` call == one tick), which
-``TrafficRecorder.to_trace`` bins into a replayable arrival trace.
+``TrafficRecorder.to_trace`` bins into a replayable arrival trace and
+``TrafficRecorder.latency_stats`` turns into p50/p99 E2E latency.  A
+request whose budget is exhausted at admission (``max_new <= 1``: one token
+comes straight from the prefill logits, zero means none) completes AT its
+admission tick in both modes -- it neither occupies a slot nor triggers a
+decode dispatch.
+
+See docs/serving.md for the full contract.
 """
 from __future__ import annotations
 
@@ -40,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer
+from . import kvpool
 
 
 @dataclasses.dataclass
@@ -69,12 +88,24 @@ class ServingEngine:
     ``launch.mesh.make_cells_mesh(model=M)``) turns on tensor parallelism:
     params are placed with the ``launch.sharding`` policy and the jitted
     prefill/decode trace under the mesh's activation-sharding context, so
-    GSPMD splits attention heads / FFN hidden / vocab M ways.  Model-sharded
-    serving produces the same greedy tokens as the unsharded engine
-    (tests/test_model_axis.py pins it, ragged batches included)."""
+    GSPMD splits attention heads / FFN hidden / vocab M ways.  The KV block
+    pool shards its kv-head dim the same way while the block tables stay
+    replicated (every shard indexes the same table, gathers its own head
+    shard).  Model-sharded serving produces the same greedy tokens as the
+    unsharded engine (tests/test_model_axis.py pins it, ragged batches
+    included).
+
+    ``sync_batching=False`` (default): continuous batching -- per-tick
+    admission into free slots, paged KV (``kv_block`` tokens per block,
+    ``kv_blocks`` pool blocks; default sized so every slot can reach
+    ``s_max``), youngest-request preemption when the pool runs dry.
+    ``sync_batching=True``: the synchronized-batch compat engine.
+    """
 
     def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 128,
-                 prefill_buckets=None, recorder=None, mesh=None):
+                 prefill_buckets=None, recorder=None, mesh=None,
+                 sync_batching: bool = False, kv_block: int = 16,
+                 kv_blocks: int | None = None):
         self.mesh = mesh
         if mesh is not None:
             from ..launch.sharding import place_params
@@ -82,6 +113,7 @@ class ServingEngine:
         self.cfg, self.params = cfg, params
         self.slots = slots
         self.s_max = s_max
+        self.sync_batching = sync_batching
         self.prefill_buckets = tuple(sorted(
             _bucket_ladder(s_max) if prefill_buckets is None
             else prefill_buckets))
@@ -94,23 +126,57 @@ class ServingEngine:
         self.active: list[Request | None] = [None] * slots
         self._completed: list[Request] = []
         self.remaining = np.zeros(slots, np.int32)
-        self.cache = None
-        # (slots, width, ragged?) triples traced so far == jit compilations
+        self.decode_steps = 0                # jitted decode dispatches
+        self.preemptions = 0                 # continuous mode only
+        self.cache = None                    # sync mode's shared cache
+        # (batch, width, ragged?) triples traced so far == jit compilations
         self._prefill_shapes: set[tuple] = set()
         from ..launch.sharding import shard_ctx
-        self._decode = shard_ctx(mesh, jax.jit(
-            lambda cache, toks: transformer.decode_step(params, cfg, cache, toks)))
         self._prefill = shard_ctx(mesh, jax.jit(
             lambda batch, pad: transformer.prefill(params, cfg, batch,
                                                    s_max=s_max, pad=pad)))
+        if sync_batching:
+            self._decode = shard_ctx(mesh, jax.jit(
+                lambda cache, toks: transformer.decode_step(params, cfg,
+                                                            cache, toks)))
+            return
+
+        # -- continuous-batching state ------------------------------------
+        self.kv_block = kv_block
+        self.table_width = -(-s_max // kv_block)            # blocks per slot
+        if kv_blocks is None:
+            # every slot can page out to s_max, plus the reserved dummy
+            kv_blocks = slots * self.table_width + 1
+        self.allocator = kvpool.BlockAllocator(kv_blocks, kv_block)
+        state = kvpool.init_decode_state(cfg, params, slots, kv_blocks,
+                                         kv_block)
+        if mesh is not None:
+            state = kvpool.place_decode_state(mesh, state)
+        self._pool_state = state
+        self.block_tables = np.zeros((slots, self.table_width), np.int32)
+        self.seq_lens = np.zeros(slots, np.int32)
+        self.last_tokens = np.zeros(slots, np.int32)
+        self.owned: list[list[int]] = [[] for _ in range(slots)]
+        self._admit_seq = np.full(slots, -1, np.int64)      # admission order
+        self._admit_counter = 0
+        self._commit = shard_ctx(mesh, jax.jit(
+            lambda state, solo, pad, slot, ids: kvpool.commit_prefill(
+                state, solo, pad, slot, ids, block_size=kv_block)))
+        self._decode_paged = shard_ctx(mesh, jax.jit(
+            lambda state, toks, table, lens: transformer.decode_step_paged(
+                params, cfg, state, toks, table, lens)))
 
     @property
     def prefill_compiles(self) -> int:
         """Distinct prefill signatures traced so far (== jit compilations):
-        one per (slots, bucket width, ragged-or-not) combination."""
+        one per (batch, bucket width, ragged-or-not) combination."""
         return len(self._prefill_shapes)
 
     def submit(self, req: Request):
+        if req.ue is not None and req.ue < 0:
+            raise ValueError(f"request {req.rid}: ue must be >= 0, got "
+                             f"{req.ue} (negative UEs would fold into valid "
+                             f"trace columns)")
         self.queue.append(req)
         if self.recorder is not None:
             self.recorder.record_submit(req.rid, self.clock, ue=req.ue)
@@ -136,18 +202,171 @@ class ServingEngine:
                 return b
         return width
 
-    def _admit(self):
-        """Fill free slots with queued requests (batch prefill).
+    # -- shared lifecycle helpers -------------------------------------------
 
-        Synchronized-batch simplification: admission happens when ALL slots
-        are free (prompts share one prefill); a production engine would use
-        per-slot position tracking -- noted in DESIGN.md.
+    def _complete(self, req: Request):
+        req.done = True
+        self._completed.append(req)
+        if self.recorder is not None:
+            self.recorder.record_complete(req.rid, self.clock)
 
-        Shorter prompts are LEFT-padded to the batch's bucket width; the pad
-        counts flow into ``transformer.prefill`` as an attention mask +
-        position shift, so padding (mixed lengths AND bucket slack) never
-        changes any row's logits.
-        """
+    def _complete_at_admission(self, req: Request):
+        """Budget exhausted at admit time (max_new <= 1): the single token
+        (if any) came from the prefill logits, so the request completes AT
+        its admission tick -- no slot, no decode dispatch."""
+        if self.recorder is not None:
+            self.recorder.record_admit(req.rid, self.clock)
+        self._complete(req)
+
+    def _solo_prefill(self, req: Request):
+        """Batch-1 bucketed prefill.  Returns (logits (V,), cache, pad)."""
+        n = len(req.prompt)
+        width = self._bucket_width(n, max(req.max_new, 1))
+        toks = np.pad(np.asarray(req.prompt), (width - n, 0))[None]
+        pad = width - n
+        pad_arg = jnp.asarray([pad], jnp.int32) if pad else None
+        self._prefill_shapes.add((1, width, pad_arg is not None))
+        logits, cache = self._prefill(
+            {"tokens": jnp.asarray(toks, jnp.int32)}, pad_arg)
+        return logits[0], cache, pad
+
+    # -- continuous batching ------------------------------------------------
+
+    def _admit_continuous(self):
+        """Admit from the queue head into free slots, one request per solo
+        prefill, until slots or KV blocks run out (FIFO: a request that
+        cannot be placed blocks the ones behind it)."""
+        while self.queue:
+            req = self.queue[0]
+            n = len(req.prompt)
+            if req.max_new <= 0:
+                self.queue.popleft()
+                self._complete_at_admission(req)
+                continue
+            if req.max_new == 1:
+                self.queue.popleft()
+                logits, _, _ = self._solo_prefill(req)
+                req.out.append(int(np.asarray(jnp.argmax(logits, -1))))
+                self._complete_at_admission(req)
+                continue
+            free = [i for i, r in enumerate(self.active) if r is None]
+            if not free:
+                return
+            # worst case the request holds len + max_new - 1 KV tokens; a
+            # request that could never fit the pool must fail loudly, not
+            # preempt-loop forever
+            total = kvpool.blocks_for(n + req.max_new - 1, self.kv_block)
+            if total > self.allocator.capacity:
+                raise ValueError(
+                    f"request {req.rid} needs {total} KV blocks "
+                    f"({n} prompt + {req.max_new} decode tokens) but the "
+                    f"pool holds {self.allocator.capacity}")
+            blocks = self.allocator.alloc(kvpool.blocks_for(n, self.kv_block))
+            if blocks is None:
+                return                       # pool full: wait for completions
+            self.queue.popleft()
+            slot = free[0]
+            logits, cache, pad = self._solo_prefill(req)
+            width = len(req.prompt) + pad
+            ids = np.zeros(-(-width // self.kv_block), np.int32)
+            ids[:len(blocks)] = blocks       # slack blocks -> dummy block 0
+            solo = {"units": cache["units"], "tail": cache["tail"]}
+            self._pool_state = self._commit(
+                self._pool_state, solo, jnp.int32(pad), jnp.int32(slot),
+                jnp.asarray(ids))
+            nxt = int(np.asarray(jnp.argmax(logits, -1)))
+            req.out.append(nxt)
+            self.active[slot] = req
+            self.owned[slot] = list(blocks)
+            self.block_tables[slot, :] = 0
+            self.block_tables[slot, :len(blocks)] = blocks
+            self.seq_lens[slot] = n
+            self.last_tokens[slot] = nxt
+            self.remaining[slot] = req.max_new - 1
+            self._admit_seq[slot] = self._admit_counter
+            self._admit_counter += 1
+            if self.recorder is not None:
+                self.recorder.record_admit(req.rid, self.clock)
+
+    def _release_slot(self, slot: int):
+        self.allocator.free(self.owned[slot])
+        self.owned[slot] = []
+        self.block_tables[slot, :] = 0
+        self.seq_lens[slot] = 0
+        self.last_tokens[slot] = 0
+        self.remaining[slot] = 0
+        self._admit_seq[slot] = -1
+        self.active[slot] = None
+
+    def _preempt(self, slot: int):
+        """Evict the request in ``slot`` back to the FRONT of the queue,
+        discarding its output and KV (recompute-style preemption: greedy
+        decode is deterministic, so re-admission regenerates the same
+        tokens)."""
+        req = self.active[slot]
+        req.out.clear()
+        self._release_slot(slot)
+        self.queue.appendleft(req)
+        self.preemptions += 1
+
+    def _grow_blocks(self):
+        """Before a decode tick, make sure every active slot owns the block
+        its next KV write lands in.  Oldest slots grow first; when the pool
+        is dry, the YOUNGEST active request is preempted until the
+        allocation succeeds (head-of-line requests always make progress --
+        the admission fit check guarantees a lone request can reach its
+        full budget)."""
+        order = sorted((i for i, r in enumerate(self.active) if r is not None),
+                       key=lambda i: self._admit_seq[i])
+        for slot in order:
+            if self.active[slot] is None:    # preempted below, mid-loop
+                continue
+            bidx = int(self.seq_lens[slot]) // self.kv_block
+            if bidx < len(self.owned[slot]):
+                continue
+            while True:
+                got = self.allocator.alloc(1)
+                if got is not None:
+                    self.owned[slot].append(got[0])
+                    self.block_tables[slot, bidx] = got[0]
+                    break
+                victim = max(
+                    (j for j, r in enumerate(self.active) if r is not None),
+                    key=lambda j: self._admit_seq[j])
+                self._preempt(victim)
+                if victim == slot:
+                    break                    # this slot went back to queue
+
+    def _step_continuous(self) -> bool:
+        self._admit_continuous()
+        self._grow_blocks()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return bool(self.queue)
+        logits, self._pool_state = self._decode_paged(
+            self._pool_state, jnp.asarray(self.last_tokens),
+            jnp.asarray(self.block_tables), jnp.asarray(self.seq_lens))
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i in live:
+            req = self.active[i]
+            self.seq_lens[i] += 1
+            self.last_tokens[i] = nxt[i]
+            req.out.append(int(nxt[i]))
+            self.remaining[i] -= 1
+            if self.remaining[i] <= 0:
+                self._release_slot(i)
+                self._complete(req)
+        return True
+
+    # -- synchronized-batch compat mode -------------------------------------
+
+    def _admit_sync(self):
+        """Compat-mode admission: wait until ALL slots are free, then prefill
+        the next wave as one left-padded batch (pad counts ride in the cache
+        so decode keeps masking them).  This is the architecture whose
+        head-of-line blocking the continuous engine removes -- kept only for
+        A/B baselines and parity tests (``sync_batching=True``)."""
         if any(r is not None for r in self.active) or not self.queue:
             return
         batch = []
@@ -172,27 +391,28 @@ class ServingEngine:
         for i, r in enumerate(batch):
             self.active[i] = r if r.rid >= 0 else None
             self.remaining[i] = r.max_new
-            if r.rid >= 0:
-                if self.recorder is not None:
-                    self.recorder.record_admit(r.rid, self.clock)
-                if r.max_new > 0:
-                    r.out.append(int(nxt[i]))
-                    self.remaining[i] -= 1
+            if r.rid < 0:
+                continue
+            if self.recorder is not None:
+                self.recorder.record_admit(r.rid, self.clock)
+            if r.max_new > 0:
+                r.out.append(int(nxt[i]))
+                self.remaining[i] -= 1
+            if self.remaining[i] <= 0:
+                # budget exhausted by the prefill logits alone: complete at
+                # the admission tick, don't ride through a decode step
+                self.active[i] = None
+                self._complete(r)
         self._last = nxt
 
-    def step(self) -> bool:
-        """One engine iteration (one clock tick).  Returns False when idle.
-
-        The clock advances on every call -- idle ticks included -- so a
-        driver that interleaves ``submit`` with ``step`` produces lifecycle
-        timestamps on one monotonic time base for the traffic recorder.
-        """
-        self.clock += 1
-        self._admit()
+    def _step_sync(self) -> bool:
+        self._admit_sync()
         if self.cache is None or all(r is None for r in self.active):
-            return False
+            self.cache = None
+            return bool(self.queue)
         logits, self.cache = self._decode(self.cache,
                                           jnp.asarray(self._last, jnp.int32))
+        self.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits, -1))
         self._last = nxt
         alive = False
@@ -203,16 +423,27 @@ class ServingEngine:
                 r.out.append(int(nxt[i]))
                 self.remaining[i] -= 1
             if self.remaining[i] <= 0:
-                r.done = True
                 self.active[i] = None
-                self._completed.append(r)
-                if self.recorder is not None:
-                    self.recorder.record_complete(r.rid, self.clock)
+                self._complete(r)
             else:
                 alive = True
         if not alive and not self.queue:
             self.cache = None
         return True
+
+    # -- driver interface ----------------------------------------------------
+
+    def step(self) -> bool:
+        """One engine iteration (one clock tick).  Returns False when idle.
+
+        The clock advances on every call -- idle ticks included -- so a
+        driver that interleaves ``submit`` with ``step`` produces lifecycle
+        timestamps on one monotonic time base for the traffic recorder.
+        """
+        self.clock += 1
+        if self.sync_batching:
+            return self._step_sync()
+        return self._step_continuous()
 
     def pop_completed(self) -> list[Request]:
         """Drain and return requests finished since the last drain, in

@@ -1,0 +1,255 @@
+"""Paged KV-cache pool for continuous-batching serving.
+
+The ES tier serves *continuous* arrivals (the paper's serial queuing model),
+so decode slots come and go independently -- one shared dense
+``(slots, s_max)`` KV buffer per layer would tie every slot to one write
+frontier.  Instead the global-attention KV cache lives in a **block pool**:
+
+* ``k``/``v`` pool arrays of ``n_blocks`` fixed-size blocks
+  (``block_size`` token slots each), stacked over scanned units --
+  ``(U, n_blocks, block_size, KV, hd)`` -- or unstacked for tail layers;
+* a host-side :class:`BlockAllocator` (free-list, O(1) alloc/free) whose
+  **block 0 is a reserved dummy**: idle decode rows scatter their garbage
+  KV there, so one jitted decode step serves any mix of live/idle slots;
+* per-slot **block tables** ``(slots, ceil(s_max/block_size))`` int32 kept
+  by the engine and passed into the jitted decode step, which gathers each
+  row's blocks back into a contiguous view for ``kernels/decode_attention``
+  with a per-row ragged ``valid_mask`` (position ``<= seq_len``).
+
+Only global-attention KV pages: sliding-window rings ("l") are fixed
+``window`` slots and recurrent state ("r"/"s") is O(1) per slot, so those
+live as plain per-slot rows (batch dim = slots).
+
+:func:`commit_prefill` is the admission bridge: a request prefills SOLO
+(batch=1 at its bucket width, left-padded -- the PR-3/PR-4 ragged
+machinery keeps it exact), then the jitted commit strips the pad (rolling
+the token axis so real tokens sit at positions ``0..len-1``), writes the
+KV into the slot's allocated blocks, re-slots the ring caches to semantic
+positions, and inserts the recurrent state at the slot row.  The paged
+cache is therefore **pad-free**: decode positions are plain per-slot
+``seq_lens``, no pad vector rides along.
+
+Under a ``("cells", "model")`` mesh, :func:`place_decode_state` shards the
+pool's kv-head dim over ``"model"`` (when divisible) and replicates block
+tables -- every model shard holds the same table, each gathers only its
+head shard (the "model-sharded block tables" contract of docs/serving.md).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..models.attention import KVCache, RingCache
+from ..models.rglru import RglruCache
+from ..models.ssm import SsmCache
+
+_CACHE_TYPES = (KVCache, RingCache, SsmCache, RglruCache)
+
+
+class BlockAllocator:
+    """Host-side free-list over the KV block pool.
+
+    Block 0 is reserved as the dummy block (idle decode rows write there);
+    ``capacity`` is therefore ``n_blocks - 1``.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (one is the reserved dummy), "
+                             f"got {n_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: deque[int] = deque(range(1, n_blocks))
+
+    @property
+    def capacity(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` blocks, or None (and no side effect) if unavailable."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            return None
+        return [self._free.popleft() for _ in range(n)]
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if not 1 <= b < self.n_blocks:
+                raise ValueError(f"block {b} outside pool (dummy block 0 is "
+                                 f"never allocated)")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``tokens`` KV entries (at least one)."""
+    return max(1, -(-tokens // block_size))
+
+
+def _check_pattern(cfg) -> None:
+    bad = set("xde") & (set(cfg.block_pattern) | set(cfg.tail_pattern or ()))
+    if bad or cfg.enc_layers:
+        raise ValueError(
+            f"continuous batching serves plain decoder stacks (g/l/m/r/s); "
+            f"{cfg.name} has {sorted(bad) or 'encoder layers'} -- "
+            f"use ServingEngine(sync_batching=True)")
+
+
+def _is_stacked(path) -> bool:
+    """Unit caches come out of the block scan stacked (U, B, ...); tail
+    caches are per-layer (B, ...).  The path tells which."""
+    first = path[0]
+    key = getattr(first, "key", getattr(first, "idx", None))
+    return str(key) == "units"
+
+
+def _batch_axis(path) -> int:
+    return 1 if _is_stacked(path) else 0
+
+
+def init_decode_state(cfg, params, slots: int, n_blocks: int,
+                      block_size: int):
+    """Build the zeroed continuous-decode cache pytree.
+
+    Mirrors the structure ``transformer.prefill`` returns (minus the
+    ``pos``/``pad`` bookkeeping), with global-attention KV leaves replaced
+    by block pools and every other leaf's batch dim widened to ``slots``.
+    """
+    _check_pattern(cfg)
+
+    def shape_fn(p):
+        dummy = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+        _, caches = transformer.prefill(p, cfg, dummy, s_max=8)
+        return {"units": caches["units"], "tail": caches["tail"]}
+
+    template = jax.eval_shape(shape_fn, params)
+
+    def build(path, node):
+        ax = _batch_axis(path)
+        if isinstance(node, KVCache):
+            lead = node.k.shape[:ax]            # () or (U,)
+            kvh, hd = node.k.shape[-2:]
+            shp = (*lead, n_blocks, block_size, kvh, hd)
+            return KVCache(k=jnp.zeros(shp, node.k.dtype),
+                           v=jnp.zeros(shp, node.v.dtype))
+        if isinstance(node, RingCache):
+            def widen(leaf):
+                s = list(leaf.shape)
+                s[ax] = slots
+                return tuple(s)
+            return RingCache(k=jnp.zeros(widen(node.k), node.k.dtype),
+                             v=jnp.zeros(widen(node.v), node.v.dtype),
+                             pos=jnp.full(widen(node.pos), -1, jnp.int32))
+        if isinstance(node, (SsmCache, RglruCache)):
+            def widen(leaf):
+                s = list(leaf.shape)
+                s[ax] = slots
+                return jnp.zeros(tuple(s), leaf.dtype)
+            return type(node)(*[widen(f) for f in node])
+        raise ValueError(f"unsupported cache node {type(node)} at {path}")
+
+    return jax.tree_util.tree_map_with_path(build, template,
+                                            is_leaf=_cache_leaf)
+
+
+def _cache_leaf(x) -> bool:
+    return isinstance(x, _CACHE_TYPES)
+
+
+def commit_prefill(state, solo, pad, slot, block_ids, *, block_size: int):
+    """Insert one solo-prefilled request into the continuous decode state.
+
+    ``solo`` is the cache of a batch-1 bucketed prefill (``pos``/``pad``
+    stripped), ``pad`` its scalar left-pad count, ``slot`` the target decode
+    row, ``block_ids`` (ceil(width/block_size),) the slot's allocated pool
+    blocks -- entries past the owned count point at the dummy block 0 and
+    absorb the rolled pad garbage.  jit-compatible: ``pad``/``slot`` are
+    traced scalars (no recompile per request), only the prefill width
+    changes the signature (one compile per bucket, like prefill itself).
+    """
+    nb = block_ids.shape[0]
+
+    def insert(path, cont, one):
+        ax = _batch_axis(path)
+        if isinstance(cont, KVCache):
+            def paged(pool, leaf):
+                # the solo cache holds s_max token slots (prompt at
+                # 0..width-1, zeros beyond); roll the pad out, then cut the
+                # token axis to exactly nb*block_size entries
+                tok = leaf.shape[ax + 1]
+                x = jnp.squeeze(leaf, axis=ax)           # (L..., s_max, KV, hd)
+                x = jnp.roll(x, -pad, axis=ax)           # real tokens first
+                want = nb * block_size
+                if want < tok:
+                    x = jax.lax.slice_in_dim(x, 0, want, axis=ax)
+                elif want > tok:
+                    wid = [(0, 0)] * x.ndim
+                    wid[ax] = (0, want - tok)
+                    x = jnp.pad(x, wid)
+                kvh, hd = x.shape[-2:]
+                x = x.reshape(*x.shape[:ax], nb, block_size, kvh, hd)
+                if ax:
+                    return pool.at[:, block_ids].set(x)
+                return pool.at[block_ids].set(x)
+            return KVCache(k=paged(cont.k, one.k), v=paged(cont.v, one.v))
+        if isinstance(cont, RingCache):
+            # prefill stored entries at ABSOLUTE (padded) ring slots; shift
+            # to semantic slots (pos - pad) and invalidate pad entries so
+            # decode's per-row ``seq_len % window`` writes continue cleanly.
+            rk = jnp.roll(jnp.squeeze(one.k, axis=ax), -pad, axis=ax)
+            rv = jnp.roll(jnp.squeeze(one.v, axis=ax), -pad, axis=ax)
+            rp = jnp.roll(jnp.squeeze(one.pos, axis=ax), -pad, axis=ax)
+            rp = jnp.where(rp >= pad, rp - pad, -1)
+            if ax:
+                return RingCache(k=cont.k.at[:, slot].set(rk),
+                                 v=cont.v.at[:, slot].set(rv),
+                                 pos=cont.pos.at[:, slot].set(rp))
+            return RingCache(k=cont.k.at[slot].set(rk),
+                             v=cont.v.at[slot].set(rv),
+                             pos=cont.pos.at[slot].set(rp))
+        if isinstance(cont, (SsmCache, RglruCache)):
+            def row(c, o):
+                o = jnp.squeeze(o, axis=ax)
+                if ax:
+                    return c.at[:, slot].set(o)
+                return c.at[slot].set(o)
+            return type(cont)(*[row(c, o) for c, o in zip(cont, one)])
+        raise ValueError(f"unsupported cache node {type(cont)} at {path}")
+
+    return jax.tree_util.tree_map_with_path(insert, state, solo,
+                                            is_leaf=_cache_leaf)
+
+
+def place_decode_state(mesh, state):
+    """Device-put the decode state under a mesh: pool/ring kv-head dims
+    shard over ``"model"`` when divisible, block tables and everything else
+    replicate (each model shard reads the same table, gathers its own head
+    shard)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if "model" not in mesh.axis_names:
+        return jax.tree.map(
+            lambda l: jax.device_put(l, NamedSharding(mesh, P())), state)
+    m = mesh.shape["model"]
+
+    def place(path, leaf):
+        last = path[-1]
+        name = str(getattr(last, "name", getattr(last, "key", "")))
+        if name in ("k", "v") and leaf.ndim >= 4 and leaf.shape[-2] % m == 0:
+            spec = P(*([None] * (leaf.ndim - 2)), "model", None)
+        else:
+            spec = P()
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(place, state)

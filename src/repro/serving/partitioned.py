@@ -17,6 +17,15 @@ heads and FFN hidden dims split M ways -- so the UE and ES halves both
 exploit per-cell model parallelism while the boundary activation (psi)
 stays replicated across the model axis.  Model-sharded inference matches
 the unsharded single-device result (tests/test_model_axis.py).
+
+The ES tier also serves *continuous* token traffic: at the full-offload
+cut (``cut_unit == 0``) the ES half holds the complete stack, and
+:meth:`PartitionedLM.es_engine` stands up a continuous-batching
+:class:`~repro.serving.engine.ServingEngine` on it -- per-tick admission
+over the paged KV pool (``serving/kvpool.py``).  Under a model mesh the
+pool's kv-head dim shards M ways while the per-slot block tables stay
+replicated, mirroring psi's replication here: control state (tables,
+seq_lens, psi) is tiny and shared, tensor state (KV, weights) splits.
 """
 from __future__ import annotations
 
@@ -102,6 +111,25 @@ class PartitionedLM:
         if self.cut_unit == 0:
             return batch * seq * 4                      # raw tokens
         return batch * seq * self.cfg.d_model * 2        # bf16 hidden
+
+    def es_engine(self, **engine_kwargs):
+        """A continuous-batching :class:`~repro.serving.engine.ServingEngine`
+        on the ES half (same mesh, same placement policy).
+
+        Full-offload cuts only: with ``cut_unit == 0`` the ES params are the
+        complete stack, exactly what the token-serving engine needs.
+        Partial cuts split single *forward passes* across tiers -- their
+        per-request schedule belongs to the MEC controller, not the ES
+        decode loop -- so asking for an engine there is a usage error.
+        """
+        if self.cut_unit != 0:
+            raise ValueError(
+                f"es_engine needs the full-offload cut (cut_unit=0, the "
+                f"whole stack on the ES tier); got cut_unit="
+                f"{self.cut_unit}")
+        from .engine import ServingEngine
+        return ServingEngine(self.cfg, self.es_params, mesh=self.mesh,
+                             **engine_kwargs)
 
     def infer(self, tokens):
         """Returns (logits, boundary_activation) -- the latter is what the

@@ -62,8 +62,13 @@ class TrafficRecorder:
     # -- engine-facing hooks -------------------------------------------------
 
     def record_submit(self, rid: int, t: int, ue: int | None = None) -> None:
+        if ue is not None and ue < 0:
+            raise ValueError(f"request {rid}: ue must be >= 0, got {ue}")
         ev = self.events.setdefault(rid, RequestEvents(rid=rid, ue=ue))
-        ev.ue = ue
+        if ue is not None:
+            # a resubmit without ue= must not wipe the UE declared earlier
+            # (the request would silently fall back to rid % n_ue binning)
+            ev.ue = ue
         ev.submit = t
 
     def record_admit(self, rid: int, t: int) -> None:
@@ -85,6 +90,36 @@ class TrafficRecorder:
             if t is not None:
                 out.append((int(t), rid))
         return out
+
+    def latencies(self, start: str = "submit",
+                  end: str = "complete") -> np.ndarray:
+        """Tick deltas ``end - start`` for every request that has both
+        events, in rid order.  The default pair is E2E latency
+        (submit->complete ticks) -- the paper's end-to-end delay in units
+        of the engine clock."""
+        for which in (start, end):
+            if which not in ("submit", "admit", "complete"):
+                raise ValueError(f"unknown event {which!r}")
+        out = []
+        for rid in sorted(self.events):
+            ev = self.events[rid]
+            a, b = getattr(ev, start), getattr(ev, end)
+            if a is not None and b is not None:
+                out.append(b - a)
+        return np.asarray(out, np.int64)
+
+    def latency_stats(self, start: str = "submit",
+                      end: str = "complete") -> dict:
+        """Summary stats of :meth:`latencies`: count, mean, p50, p99, max
+        (ticks).  Empty when no request has both events."""
+        lat = self.latencies(start, end)
+        if not len(lat):
+            return {"n": 0}
+        return {"n": int(len(lat)),
+                "mean": float(np.mean(lat)),
+                "p50": float(np.percentile(lat, 50)),
+                "p99": float(np.percentile(lat, 99)),
+                "max": int(np.max(lat))}
 
     def to_trace(self, n_ue: int, *, bin_ticks: int = 1, slot_s: float = 1.0,
                  which: str = "submit", horizon: int | None = None) -> Trace:

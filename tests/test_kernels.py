@@ -159,6 +159,26 @@ def test_decode_attention(b, s, h, kv, hd, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("s,k_block", [(10, 4), (17, 8), (33, 16), (5, 8)])
+def test_decode_attention_ragged_tail_block(s, k_block):
+    """S need not be a k_block multiple: the wrapper pads the tail block
+    with masked entries (paged-KV gathers hand the kernel arbitrary cache
+    lengths).  exp(-1e30 - m) underflows to exactly 0, so the padding is
+    semantics-free, not just small."""
+    ks = jax.random.split(KEY, 4)
+    b, h, kv, hd = 3, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, 1, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    got = decode_attention_pallas(q, k, v, valid_mask=valid, k_block=k_block,
+                                  interpret=True)
+    want = ref.decode_attention_ref(q, k, v, valid_mask=valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # SSD scan (mamba2)
 # ---------------------------------------------------------------------------

@@ -138,13 +138,14 @@ def test_engine_mixed_lengths_match_solo(setup):
 
 
 def test_prefill_bucketing_avoids_recompiles(setup):
-    """Steady-state serving must not churn the prefill jit cache: admitted
-    batches pad to power-of-two width buckets, so every prompt-length mix
-    inside one bucket shares one compiled shape."""
+    """Steady-state serving must not churn the prefill jit cache: prompts
+    pad to power-of-two width buckets, so every prompt-length mix inside
+    one bucket shares one compiled shape.  Continuous mode prefills each
+    request solo, so signatures are (batch=1, bucket, ragged?)."""
     cfg, params = setup
     eng = ServingEngine(cfg, params, slots=2, s_max=64)
     rng = np.random.default_rng(3)
-    # 4 admission waves x mixed lengths 9..15 -> all land in the 16 bucket
+    # 4 waves x mixed lengths 9..15 -> all land in the 16 bucket
     # (always ragged: lengths stay below the bucket width)
     for wave in range(4):
         for i in range(2):
@@ -154,20 +155,34 @@ def test_prefill_bucketing_avoids_recompiles(setup):
                                .astype(np.int32), max_new=2))
         eng.run_until_idle()
     assert eng.prefill_compiles == 1
-    assert eng._prefill_shapes == {(2, 16, True)}
+    assert eng._prefill_shapes == {(1, 16, True)}
     # a longer prompt moves to the next bucket: exactly one more compile
     eng.submit(Request(rid=99, prompt=rng.integers(0, cfg.vocab, 20)
                        .astype(np.int32), max_new=2))
     eng.run_until_idle()
     assert eng.prefill_compiles == 2
-    # a pad-free batch (prompts exactly bucket-width) takes the maskless
-    # kernel path: same width, separate signature
-    for i in range(2):
-        eng.submit(Request(rid=200 + i,
-                           prompt=rng.integers(0, cfg.vocab, 16)
-                           .astype(np.int32), max_new=2))
+    # a pad-free prompt (exactly bucket-width) takes the maskless kernel
+    # path: same width, separate signature
+    eng.submit(Request(rid=200, prompt=rng.integers(0, cfg.vocab, 16)
+                       .astype(np.int32), max_new=2))
     eng.run_until_idle()
-    assert (2, 16, False) in eng._prefill_shapes
+    assert (1, 16, False) in eng._prefill_shapes
+
+
+def test_prefill_bucketing_sync_mode(setup):
+    """Compat mode batches the admitted wave into ONE prefill: signatures
+    are (slots, bucket, ragged?) exactly as before the continuous engine."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=2, s_max=64, sync_batching=True)
+    rng = np.random.default_rng(3)
+    for wave in range(3):
+        for i in range(2):
+            n = int(rng.integers(9, 16))
+            eng.submit(Request(rid=wave * 2 + i,
+                               prompt=rng.integers(0, cfg.vocab, n)
+                               .astype(np.int32), max_new=2))
+        eng.run_until_idle()
+    assert eng._prefill_shapes == {(2, 16, True)}
 
 
 def test_bucket_respects_decode_budget(setup):
@@ -196,6 +211,213 @@ def test_bucket_respects_decode_budget(setup):
                         .astype(np.int32), max_new=10))
     with pytest.raises(ValueError, match="exceeds s_max"):
         eng2.run_until_idle()
+
+
+def _solo_tokens(cfg, params, prompt, max_new, s_max=64):
+    eng = ServingEngine(cfg, params, slots=1, s_max=s_max)
+    req = Request(rid=0, prompt=prompt, max_new=max_new)
+    eng.submit(req)
+    eng.run_until_idle()
+    return req.out
+
+
+def test_continuous_matches_sync_and_solo(setup):
+    """The two engine modes may only differ in WHEN, never WHAT: identical
+    request streams produce identical per-request greedy tokens, each equal
+    to its solo run."""
+    cfg, params = setup
+    rng = np.random.default_rng(17)
+    spec = [(rng.integers(0, cfg.vocab, n).astype(np.int32), m)
+            for n, m in ((5, 6), (11, 3), (8, 4), (14, 2), (6, 5))]
+    outs = {}
+    for sync in (False, True):
+        eng = ServingEngine(cfg, params, slots=2, s_max=64,
+                            sync_batching=sync)
+        reqs = [Request(rid=i, prompt=p, max_new=m)
+                for i, (p, m) in enumerate(spec)]
+        for r in reqs:
+            eng.submit(r)
+        assert len(eng.run_until_idle()) == 5
+        outs[sync] = [r.out for r in reqs]
+    assert outs[False] == outs[True]
+    for (p, m), got in zip(spec, outs[False]):
+        assert got == _solo_tokens(cfg, params, p, m), f"len {len(p)}"
+
+
+@pytest.mark.parametrize("sync", [False, True], ids=["continuous", "sync"])
+def test_budget_exhausted_at_admission_completes_same_tick(setup, sync):
+    """Regression (off-by-one completion tick): max_new<=1 requests exhaust
+    their budget at admit time (the single token comes from the prefill
+    logits) -- they must complete AT the admission tick, not ride a wasted
+    decode step, and must trigger NO decode dispatch."""
+    from repro.traffic import TrafficRecorder
+    cfg, params = setup
+    rec = TrafficRecorder()
+    eng = ServingEngine(cfg, params, slots=2, s_max=64, recorder=rec,
+                        sync_batching=sync)
+    rng = np.random.default_rng(7)
+    one = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 6)
+                  .astype(np.int32), max_new=1)
+    zero = Request(rid=1, prompt=rng.integers(0, cfg.vocab, 6)
+                   .astype(np.int32), max_new=0)
+    eng.submit(one)
+    eng.submit(zero)
+    assert eng.step() in (False, True)
+    assert one.done and zero.done
+    assert len(one.out) == 1 and len(zero.out) == 0
+    assert eng.decode_steps == 0           # nothing to decode
+    # pinned timestamps: submitted at tick 0, admitted AND completed at 1
+    for rid in (0, 1):
+        ev = rec.events[rid]
+        assert (ev.submit, ev.admit, ev.complete) == (0, 1, 1), rid
+    # the single token matches the solo run's first token
+    assert one.out == _solo_tokens(cfg, params, one.prompt, 4)[:1]
+    # and the engine is genuinely idle afterwards
+    assert not eng.step()
+
+
+def test_bucket_width_fallback_and_oversize(setup):
+    """Direct unit coverage of the _bucket_width branches: the "no bucket
+    fits -> exact width" fallback and the oversized-prompt ValueError, plus
+    _bucket_ladder when s_max < lo."""
+    from repro.serving.engine import _bucket_ladder
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, s_max=24)
+    assert eng.prefill_buckets == (8, 16, 24)
+    # 13 + 10: the 16 bucket violates 16 + 10 <= 24 -> exact width
+    assert eng._bucket_width(13, 10) == 13
+    # 13 + 2: the 16 bucket fits
+    assert eng._bucket_width(13, 2) == 16
+    with pytest.raises(ValueError, match="exceeds s_max"):
+        eng._bucket_width(20, 10)
+    assert _bucket_ladder(4) == (4,)       # s_max below the smallest bucket
+    assert _bucket_ladder(8) == (8,)
+    assert _bucket_ladder(33) == (8, 16, 32, 33)
+
+
+def test_submit_rejects_negative_ue(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, s_max=32)
+    with pytest.raises(ValueError, match="ue must be >= 0"):
+        eng.submit(Request(rid=0, prompt=np.zeros(4, np.int32), ue=-3))
+
+
+def test_preemption_under_small_pool(setup):
+    """A pool too small for all slots at once forces youngest-preemption --
+    and preemption must be INVISIBLE to outputs: every request still equals
+    its solo run."""
+    cfg, params = setup
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (9, 10, 12)]
+    # 3 slots x (prompt + 8 new tokens) needs ~9 blocks of 4; give it 6
+    eng = ServingEngine(cfg, params, slots=3, s_max=32, kv_block=4,
+                        kv_blocks=7)
+    reqs = [Request(rid=i, prompt=p, max_new=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_idle()
+    assert len(finished) == 3
+    assert eng.preemptions > 0, "pool was sized to force preemption"
+    for p, r in zip(prompts, reqs):
+        assert r.out == _solo_tokens(cfg, params, p, 8, s_max=32), \
+            f"prompt len {len(p)}"
+    # all blocks returned to the free list at drain
+    assert eng.allocator.n_free == eng.allocator.capacity
+
+
+def test_oversized_request_rejected_by_pool(setup):
+    """A request whose worst-case KV footprint can never fit the pool fails
+    loudly at admission instead of preempt-looping forever."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, s_max=32, kv_block=4,
+                        kv_blocks=3)      # capacity: 2 blocks = 8 tokens
+    eng.submit(Request(rid=0, prompt=np.zeros(12, np.int32), max_new=8))
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.run_until_idle()
+
+
+def test_continuous_beats_sync_p99_flash_crowd(setup):
+    """Acceptance pin: replaying a flash-crowd burst through the continuous
+    engine strictly improves p99 submit->complete latency vs the
+    synchronized compat mode at equal slot count -- with identical
+    per-request tokens (tick-deterministic, no wall clocks involved)."""
+    from repro.traffic import TrafficRecorder
+    cfg, params = setup
+    rng = np.random.default_rng(31)
+    # burst of 8 heterogeneous requests at t=0, stragglers later
+    sched = [(0, rng.integers(0, cfg.vocab, int(rng.integers(4, 10)))
+              .astype(np.int32), int(rng.integers(2, 8))) for _ in range(8)]
+    sched += [(6, rng.integers(0, cfg.vocab, 5).astype(np.int32), 3),
+              (8, rng.integers(0, cfg.vocab, 7).astype(np.int32), 2)]
+    stats, outs = {}, {}
+    for sync in (False, True):
+        rec = TrafficRecorder()
+        eng = ServingEngine(cfg, params, slots=2, s_max=32, recorder=rec,
+                            sync_batching=sync)
+        reqs = [Request(rid=i, prompt=p, max_new=m)
+                for i, (_, p, m) in enumerate(sched)]
+        i = 0
+        for _ in range(500):
+            while i < len(sched) and sched[i][0] <= eng.clock:
+                eng.submit(reqs[i])
+                i += 1
+            if not eng.step() and i == len(sched):
+                break
+        assert all(r.done for r in reqs)
+        stats[sync] = rec.latency_stats()
+        outs[sync] = [r.out for r in reqs]
+    assert outs[False] == outs[True]
+    assert stats[False]["p99"] < stats[True]["p99"], stats
+    assert stats[False]["p50"] <= stats[True]["p50"], stats
+
+
+def test_kvpool_block_allocator():
+    from repro.serving.kvpool import BlockAllocator, blocks_for
+    al = BlockAllocator(5, 4)
+    assert al.capacity == 4 and al.n_free == 4     # block 0 reserved
+    got = al.alloc(3)
+    assert got is not None and 0 not in got
+    assert al.alloc(2) is None                     # only 1 left: no effect
+    assert al.n_free == 1
+    al.free(got)
+    assert al.n_free == 4
+    with pytest.raises(ValueError, match="double free"):
+        al.free([got[0]])                          # already back in the list
+    with pytest.raises(ValueError, match="outside pool"):
+        al.free([0])                               # the dummy block
+    with pytest.raises(ValueError, match="reserved dummy"):
+        BlockAllocator(1, 4)
+    assert blocks_for(0, 4) == 1                   # at least one block
+    assert blocks_for(8, 4) == 2
+    assert blocks_for(9, 4) == 3
+
+
+def test_kvpool_rejects_cross_attention_stacks(setup):
+    """Cross-attention kinds have no paged path; the engine must reject
+    them up front (pointing at the sync compat mode), before touching any
+    cache state."""
+    import dataclasses
+    cfg, params = setup
+    bad = dataclasses.replace(cfg, block_pattern=("g", "d"))
+    with pytest.raises(ValueError, match="sync_batching"):
+        ServingEngine(bad, params, slots=1, s_max=32)
+
+
+def test_partitioned_es_engine_full_offload(setup):
+    """cut_unit=0 hands the full stack to the ES tier; its continuous
+    engine serves tokens identical to an engine on the original params."""
+    cfg, params = setup
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    eng = PartitionedLM(cfg, params, 0).es_engine(slots=1, s_max=64)
+    req = Request(rid=0, prompt=prompt, max_new=4)
+    eng.submit(req)
+    eng.run_until_idle()
+    assert req.out == _solo_tokens(cfg, params, prompt, 4)
+    with pytest.raises(ValueError, match="full-offload"):
+        PartitionedLM(cfg, params, 2).es_engine(slots=1, s_max=64)
 
 
 @pytest.mark.slow

@@ -179,6 +179,39 @@ def test_recorder_round_robin_when_ue_unset():
     np.testing.assert_allclose(tr.rates.sum(axis=0), [2, 2, 2])
 
 
+def test_recorder_resubmit_preserves_declared_ue():
+    """Regression: a resubmit WITHOUT ue= (e.g. a preempted request re-
+    entering the queue) must not wipe the UE declared at first submit --
+    the request would silently fall back to rid % n_ue binning."""
+    rec = traffic.TrafficRecorder()
+    rec.record_submit(0, 0, ue=2)
+    rec.record_submit(0, 5)                  # resubmit, no ue argument
+    assert rec.events[0].ue == 2
+    assert rec.events[0].submit == 5         # timestamp does update
+    rec.record_submit(0, 6, ue=1)            # explicit ue still overrides
+    assert rec.events[0].ue == 1
+    with pytest.raises(ValueError, match="ue must be >= 0"):
+        rec.record_submit(1, 0, ue=-1)
+
+
+def test_recorder_latency_stats():
+    rec = traffic.TrafficRecorder()
+    assert rec.latency_stats() == {"n": 0}
+    for rid, (sub, comp) in enumerate([(0, 4), (1, 3), (2, 12)]):
+        rec.record_submit(rid, sub, ue=0)
+        rec.record_admit(rid, sub + 1)
+        rec.record_complete(rid, comp)
+    rec.record_submit(9, 5, ue=0)            # in flight: excluded
+    np.testing.assert_array_equal(rec.latencies(), [4, 2, 10])
+    st = rec.latency_stats()
+    assert st["n"] == 3 and st["max"] == 10
+    np.testing.assert_allclose(st["p50"], 4.0)
+    # queueing-only view through the same API
+    np.testing.assert_array_equal(rec.latencies("submit", "admit"), [1, 1, 1])
+    with pytest.raises(ValueError, match="unknown event"):
+        rec.latency_stats(end="nope")
+
+
 def test_recorder_horizon_and_binning():
     rec = traffic.TrafficRecorder()
     for rid, t in enumerate([0, 3, 5, 9, 11]):
