@@ -9,8 +9,6 @@ allocation — no DRL training confound) and verify both monotonicities.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.core.env import LAM_FIXED, MecConfig, paper_env
 from repro.core.lymdo import oracle_cut_fn, run_fixed
 

@@ -34,7 +34,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 
 def _sync(tree):
@@ -50,7 +49,7 @@ def bench_batched(grid, policy: str, steps: int, repeats: int):
     fn = grid.make_rollout(policy, steps)
     key = jax.random.PRNGKey(0)
     _sync(fn(key))                       # compile
-    _sync(fn(key))                       # warm
+    _sync(fn(key))                       # reprolint: ignore[key-reuse] (warm: same program on purpose)
     best = float("inf")
     for r in range(repeats):             # min-of-N: robust to CPU co-tenancy
         t0 = time.perf_counter()
@@ -82,7 +81,7 @@ def bench_loop(grid, policy: str, steps: int, repeats: int):
     cell_params = [s.params() for s in grid.scenarios]
     key = jax.random.PRNGKey(0)
     _sync(episode(cell_params[0], key))  # compile once (shapes shared)
-    _sync(episode(cell_params[0], key))  # warm
+    _sync(episode(cell_params[0], key))  # reprolint: ignore[key-reuse] (warm: same program on purpose)
     best = float("inf")
     for r in range(repeats):             # min-of-N: robust to CPU co-tenancy
         t0 = time.perf_counter()

@@ -105,7 +105,7 @@ def bench_batched(grid, policy: str, steps: int, repeats: int):
     fn = grid.make_rollout(policy, steps)
     key = jax.random.PRNGKey(0)
     _, _, summary = jax.block_until_ready(fn(key))        # compile
-    _sync(fn(key))                                        # warm
+    _sync(fn(key))                                        # reprolint: ignore[key-reuse] (warm: same program on purpose)
     best = float("inf")
     for r in range(repeats):
         t0 = time.perf_counter()

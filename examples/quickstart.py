@@ -5,8 +5,6 @@ LyMDO controller briefly, and compares it against the paper's baselines.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
 from repro.core.env import MecConfig, LAM_FIXED, paper_env
 from repro.core.lymdo import (Runner, RunConfig, edge_cut_fn, local_cut_fn,
                               oracle_cut_fn, random_cut_fn, run_fixed)

@@ -25,7 +25,8 @@ def main():
     cfg_full = get_config("qwen3-0.6b")
     cfg = reduced(cfg_full, n_layers=8)          # 8 layers -> 8 units
     key = jax.random.PRNGKey(0)
-    params = transformer.init_params(key, cfg)
+    k_params, k_env, k_tokens = jax.random.split(key, 3)
+    params = transformer.init_params(k_params, cfg)
 
     # -- LyMDO controller over the FULL arch's layer profile ---------------
     profile = lm_profile(cfg_full, prompt_tokens=64)
@@ -33,7 +34,7 @@ def main():
     env = MecEnv([profile] * n_clients,
                  MecConfig(f_max_ue=4e9, f_max_es=100e9),
                  e_budget=[0.5] * n_clients, c_budget=[1.5] * n_clients)
-    st = env.reset(key)
+    st = env.reset(k_env)
     print(f"controller over {profile.name}: L={profile.num_layers} "
           f"logical layers")
     for slot in range(3):
@@ -46,7 +47,7 @@ def main():
     layer_cut = int(np.asarray(res.cut)[0])
     unit_cut = layer_cut_to_unit(cfg, min(layer_cut, cfg.n_layers + 1))
     plm = PartitionedLM(cfg, params, unit_cut)
-    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    tokens = jax.random.randint(k_tokens, (2, 16), 0, cfg.vocab)
     logits, boundary = plm.infer(tokens)
     ref_logits, _ = transformer.forward_train(params, cfg, {"tokens": tokens})
     err = float(jnp.max(jnp.abs(logits - ref_logits)))

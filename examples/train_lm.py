@@ -7,7 +7,6 @@ compressed data-parallel sync.
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.data.pipeline import for_arch
@@ -47,7 +46,8 @@ def main():
         params, opt, metrics = step_fn(params, opt, stream.get_batch(step))
         slow = mon.end_step()
         if step % 25 == 0 or step == args.steps - 1:
-            print(f"step {step:4d} loss {float(metrics['loss']):.4f}"
+            # logging-cadence sync (every 25th step), not per-step
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f}"  # reprolint: ignore[host-sync]
                   + ("  [straggler]" if slow else ""))
         if (step + 1) % args.ckpt_every == 0:
             mgr.save(step + 1, (params, opt), extra={"data_step": step + 1})

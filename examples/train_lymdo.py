@@ -5,13 +5,12 @@ kill the process mid-run and rerun: it resumes from the last checkpoint.
   PYTHONPATH=src python examples/train_lymdo.py --episodes 300
 """
 import argparse
-import os
 
 import jax
 import numpy as np
 
 from repro.core.env import MecConfig, LAM_FIXED, paper_env
-from repro.core.lymdo import Runner, RunConfig
+from repro.core.lymdo import Runner
 from repro.core.policies import GaussianTanhPolicy
 from repro.core.ppo import PPO, PPOConfig
 from repro.runtime.checkpoint import CheckpointManager

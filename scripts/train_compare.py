@@ -6,6 +6,14 @@ Produces scripts/out/paper_artifacts.json with:
   * fig4: {delay, energy, mem, qE} x arrival rate x algorithm
   * fig5: per-slot energy-queue traces at lam=2.5 peak pattern
   * headline: delay reduction vs joint PPO at lam=2.5
+
+Evaluation runs on the scenario registry: the Fig. 4 rate sweep is ONE
+``ScenarioGrid`` of ``fixed_rate`` cells (every rate rolls out in a single
+jitted batched program, device-sharded over a ``("cells",)`` mesh when
+more than one device is live) and Fig. 5 is the ``peak_window`` scenario.
+Only the joint-PPO baseline still evaluates per-env: it allocates
+resources itself (``env.step_joint``), which the cut-policy grid rollout
+deliberately does not model.
 """
 import json
 import os
@@ -17,23 +25,22 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.env import (LAM_FIXED, LAM_IID_UNIFORM, LAM_PEAK, MecConfig,
-                            paper_env)
-from repro.core.lymdo import (Runner, RunConfig, edge_cut_fn, local_cut_fn,
-                              oracle_cut_fn, random_cut_fn, run_fixed)
+from repro.core.lymdo import (Runner, RunConfig, eval_policy_batched,
+                              run_fixed_batched)
 from repro.core.policies import (CategoricalPolicy, GaussianTanhPolicy,
                                  JointGaussianPolicy)
 from repro.core.ppo import PPO, PPOConfig
+from repro.core.scenarios import grid_from_names, make
 
 EPISODES = int(sys.argv[1]) if len(sys.argv) > 1 else 1500
 RATES = [0.5, 1.0, 1.5, 2.0, 2.5]
+EVAL_EPISODES = 5
+STEPS = 200
 OUT = os.path.join(os.path.dirname(__file__), "out")
 os.makedirs(OUT, exist_ok=True)
 
-train_env = paper_env(MecConfig(lam_mode=LAM_IID_UNIFORM))
-js = lambda d: {k: float(v) for k, v in d.items()}
+train_env = make("paper_table1").build()       # Table I, iid-uniform rates
 artifacts = {"episodes": EPISODES, "rates": RATES}
 
 agents = {}
@@ -48,8 +55,8 @@ for name, policy_cls, mode in [
     else:
         pol = policy_cls(train_env.obs_dim, train_env.L)
     agent = PPO(pol, train_env.obs_dim, PPOConfig())
-    runner = Runner(train_env, agent, steps=200, mode=mode)
-    state, hist = runner.train(RunConfig(episodes=EPISODES, steps=200,
+    runner = Runner(train_env, agent, steps=STEPS, mode=mode)
+    state, hist = runner.train(RunConfig(episodes=EPISODES, steps=STEPS,
                                          chunk=50))
     agents[name] = (agent, state, mode)
     artifacts.setdefault("fig3", {})[name] = {
@@ -58,25 +65,45 @@ for name, policy_cls, mode in [
     }
     print(f"[trained] {name} in {time.time()-t0:.0f}s", flush=True)
 
-# ---- Fig. 4: sweep arrival rates -------------------------------------------
-fig4 = {}
+# ---- Fig. 4: sweep arrival rates as ONE batched grid ------------------------
+# One fixed_rate cell per sweep point; every rate evaluates in a single
+# jitted rollout per policy instead of a Python loop over envs.
+grid = grid_from_names([("fixed_rate", {"rate": r}) for r in RATES])
+if jax.device_count() > 1:
+    grid.use_mesh()                            # ("cells",) over live devices
+
+fig4 = {str(r): {} for r in RATES}
+
+
+def record(name, metrics):
+    """metrics: summary name -> (B,) per-cell means; fan out to rates."""
+    for b, rate in enumerate(RATES):
+        fig4[str(rate)][name] = {k: float(v[b]) for k, v in metrics.items()}
+
+
+for name in ("lymdo", "lymdo_categorical"):
+    agent, state, _ = agents[name]
+    metrics, _ = eval_policy_batched(grid, agent, state,
+                                     episodes=EVAL_EPISODES, steps=STEPS)
+    record(name, metrics)
+for name in ("local", "edge", "random", "oracle"):
+    metrics, _ = run_fixed_batched(grid, name, episodes=EVAL_EPISODES,
+                                   steps=STEPS)
+    record(name, metrics)
+
+# joint PPO allocates resources itself (env.step_joint): per-env evaluation
+agent_j, state_j, mode_j = agents["ppo_joint"]
 for rate in RATES:
-    env_r = paper_env(MecConfig(lam_mode=LAM_FIXED),)
-    env_r.lam_fixed = jnp.full((env_r.n_ue,), rate, jnp.float32)
-    row = {}
-    for name, (agent, state, mode) in agents.items():
-        m, _ = Runner(env_r, agent, steps=200, mode=mode).evaluate(
-            state, episodes=5)
-        row[name] = js(m)
-    for name, fn in [("local", local_cut_fn(env_r)), ("edge", edge_cut_fn(env_r)),
-                     ("random", random_cut_fn(env_r)),
-                     ("oracle", oracle_cut_fn(env_r))]:
-        m, _ = run_fixed(env_r, fn, episodes=5, steps=200)
-        row[name] = js(m)
-    fig4[str(rate)] = row
+    env_r = make("fixed_rate", rate=rate).build()
+    m, _ = Runner(env_r, agent_j, steps=STEPS, mode=mode_j).evaluate(
+        state_j, episodes=EVAL_EPISODES)
+    fig4[str(rate)]["ppo_joint"] = {k: float(v) for k, v in m.items()}
+
+for rate in RATES:
+    row = fig4[str(rate)]
     print(f"[fig4] rate {rate}: lymdo delay {row['lymdo']['delay']:.4f} "
-          f"ppo {row['ppo_joint']['delay']:.4f} local {row['local']['delay']:.4f}",
-          flush=True)
+          f"ppo {row['ppo_joint']['delay']:.4f} "
+          f"local {row['local']['delay']:.4f}", flush=True)
 artifacts["fig4"] = fig4
 
 d_l = fig4["2.5"]["lymdo"]["delay"]
@@ -87,12 +114,16 @@ artifacts["headline_delay_reduction_best"] = 1.0 - best / d_j
 
 # ---- Fig. 5: queue stability under peak workload ----------------------------
 fig5 = {}
-env_p = paper_env(MecConfig(lam_mode=LAM_PEAK, peak_boost=1.0))
-for name in ("lymdo", "ppo_joint"):
-    agent, state, mode = agents[name]
-    _, results = Runner(env_p, agent, steps=200, mode=mode).evaluate(
-        state, episodes=1)
-    qe = np.asarray(results.q_energy)          # (slots, n_ue)
+peak_grid = grid_from_names([("peak_window", {"boost": 1.0})])
+agent_l, state_l, _ = agents["lymdo"]
+_, results = eval_policy_batched(peak_grid, agent_l, state_l,
+                                 episodes=1, steps=STEPS)
+qe_traces = {"lymdo": np.asarray(results.q_energy)[:, 0, :]}  # (steps, N)
+env_p = make("peak_window", boost=1.0).build()
+_, results_j = Runner(env_p, agent_j, steps=STEPS, mode=mode_j).evaluate(
+    state_j, episodes=1)
+qe_traces["ppo_joint"] = np.asarray(results_j.q_energy)
+for name, qe in qe_traces.items():
     fig5[name] = {
         "alexnet_queue": qe[:, :2].mean(1).tolist(),   # UEs 0-1: AlexNet
         "resnet_queue": qe[:, 2:].mean(1).tolist(),    # UEs 2-4: ResNet18

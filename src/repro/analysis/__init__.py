@@ -1,0 +1,17 @@
+"""Static-analysis subsystem: reprolint (AST rules) + contract harness.
+
+Layer 1 -- :mod:`repro.analysis.rules` / :mod:`repro.analysis.linter` --
+lints the shipping tree for the JAX failure modes this codebase hits
+(PRNG key reuse, tracer branching, recompile hazards, hot-loop host
+syncs, raw-kernel imports).  Layer 2 -- :mod:`repro.analysis.contracts` /
+:mod:`repro.analysis.retrace` -- checks the whole config registry's
+shape/dtype/pspec contracts with ``jax.eval_shape`` and pins compile
+counts for steady-state serving and grid rollouts.
+
+CLI: ``python -m repro.analysis --check`` (the CI gate); see
+docs/analysis.md.
+"""
+from .findings import Finding
+from .linter import lint_paths, lint_source
+
+__all__ = ["Finding", "lint_paths", "lint_source"]

@@ -1,0 +1,144 @@
+"""``python -m repro.analysis`` -- the static-analysis CLI and CI gate.
+
+Modes (combinable; ``--check`` is the union CI runs):
+
+  --lint        reprolint AST rules over src/repro, benchmarks, scripts,
+                examples (suppressions + baseline applied)
+  --contracts   eval_shape sweep: every registry config x every serving
+                path + pspec divisibility
+  --retrace     compile-count probes (steady-state serving, grid rollouts)
+  --check       all of the above; exit 1 on any unsuppressed finding
+
+Baseline workflow:
+
+  --write-baseline        grandfather current lint findings into
+                          analysis_baseline.json (then justify each note)
+  --baseline PATH         use a different baseline file
+
+Exit status: 0 clean, 1 findings/failures, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import findings as F
+from .linter import (BASELINE_NAME, DEFAULT_PATHS, apply_baseline,
+                     lint_paths, repo_root)
+from .rules import RULES
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint + eval_shape contract harness")
+    p.add_argument("--check", action="store_true",
+                   help="run everything; nonzero exit on any finding "
+                        "(the CI gate)")
+    p.add_argument("--lint", action="store_true", help="AST rules only")
+    p.add_argument("--contracts", action="store_true",
+                   help="eval_shape registry sweep only")
+    p.add_argument("--retrace", action="store_true",
+                   help="compile-count probes only")
+    p.add_argument("--paths", nargs="*", default=None,
+                   help=f"files/dirs to lint (default: "
+                        f"{' '.join(DEFAULT_PATHS)})")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule subset")
+    p.add_argument("--baseline", default=None,
+                   help=f"baseline file (default: <repo>/{BASELINE_NAME})")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="grandfather current lint findings")
+    p.add_argument("--list-rules", action="store_true")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable output")
+    p.add_argument("--verbose", action="store_true")
+    return p
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+    if args.list_rules:
+        for name, rule in sorted(RULES.items()):
+            print(f"{name:18s} {rule.description}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = set(rules) - set(RULES)
+        if unknown:
+            print(f"unknown rules: {sorted(unknown)}; have {sorted(RULES)}",
+                  file=sys.stderr)
+            return 2
+
+    do_lint = args.lint or args.check or args.write_baseline
+    do_contracts = args.contracts or args.check
+    do_retrace = args.retrace or args.check
+    if not (do_lint or do_contracts or do_retrace):
+        do_lint = True                   # bare invocation: lint + report
+
+    rc = 0
+    report: dict = {}
+
+    if do_lint:
+        found = lint_paths(paths=args.paths or DEFAULT_PATHS, rules=rules)
+        root = repo_root()
+        baseline_path = args.baseline or root / BASELINE_NAME
+        if args.write_baseline:
+            F.write_baseline(baseline_path, found)
+            print(f"baseline written: {len(found)} finding(s) -> "
+                  f"{baseline_path}")
+            print("justify every 'note' entry or fix the finding "
+                  "(docs/analysis.md)")
+            return 0
+        new, old, _ = apply_baseline(found, root=root,
+                                     baseline_path=baseline_path)
+        report["lint"] = {"new": [f.render() for f in new],
+                          "baselined": [f.render() for f in old]}
+        if not args.as_json:
+            for f in new:
+                print(f.render())
+            if old and args.verbose:
+                for f in old:
+                    print(f"{f.render()}  [baselined]")
+            print(f"reprolint: {len(new)} finding(s), "
+                  f"{len(old)} baselined")
+        if new:
+            rc = 1
+
+    if do_contracts:
+        from .contracts import run_contracts
+        r = run_contracts(verbose=args.verbose and not args.as_json)
+        report["contracts"] = {
+            "covered": len(r.covered), "elapsed_s": round(r.elapsed_s, 2),
+            "skipped": [list(s) for s in r.skipped],
+            "failures": [f.render() for f in r.failures]}
+        if not args.as_json:
+            for f in r.failures:
+                print(f.render())
+            print(f"contracts: {len(r.covered)} arch-path legs in "
+                  f"{r.elapsed_s:.1f}s, {len(r.failures)} failure(s), "
+                  f"{len(r.skipped)} contract skip(s)")
+        if r.failures:
+            rc = 1
+
+    if do_retrace:
+        from .retrace import run_retrace
+        fails = run_retrace()
+        report["retrace"] = {"failures": [f.render() for f in fails]}
+        if not args.as_json:
+            for f in fails:
+                print(f.render())
+            print(f"retrace: {len(fails)} failure(s)")
+        if fails:
+            rc = 1
+
+    if args.as_json:
+        print(json.dumps(report, indent=2))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

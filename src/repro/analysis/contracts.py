@@ -1,0 +1,224 @@
+"""Layer 2: abstract-interpretation contract harness.
+
+``jax.eval_shape`` traces every registered arch config through every
+serving path -- prefill, decode, paged decode, ragged prefill+decode --
+without allocating a single parameter or running any numerics, so the
+whole registry's shape/dtype contracts check in seconds on CPU.  A fifth
+leg sweeps the tensor-parallel ``param_spec`` policy over model degrees
+{1, 2, 4, 8} on a shape-only stand-in mesh and verifies every sharded
+dimension actually divides (the head-splitting bug class PR 5 fixed).
+
+``run_contracts()`` returns a list of :class:`ContractFailure`; empty
+means the registry is clean.  The paged leg skips archs the paged pool
+rejects by contract (cross-attention / encoder-decoder stacks serve via
+``sync_batching=True``) and records the skip reason instead of faking
+coverage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import base as config_base
+
+PATHS = ("prefill", "decode", "paged", "ragged", "pspec")
+MODEL_DEGREES = (1, 2, 4, 8)
+
+_B, _S, _SMAX = 2, 24, 48              # batch, prompt width, cache budget
+_SLOTS, _BLOCK = 4, 8                  # paged-pool geometry
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractFailure:
+    arch: str
+    path: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.arch} [{self.path}]: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractReport:
+    covered: tuple            # (arch, path) pairs actually traced
+    skipped: tuple            # (arch, path, reason)
+    failures: tuple
+    elapsed_s: float
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+
+class ShapeOnlyMesh:
+    """Stand-in mesh for ``param_spec``: the sharding policy only reads
+    ``axis_names`` and ``shape``, so pspec divisibility checks need no
+    devices at all."""
+
+    def __init__(self, **axes: int):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_struct(cfg, batch: int, width: int):
+    out = {"tokens": _sds((batch, width), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["image_embeds"] = _sds((batch, 8, cfg.d_model), jnp.float32)
+    if cfg.enc_layers:
+        out["src_embeds"] = _sds((batch, 16, cfg.d_model), jnp.float32)
+    return out
+
+
+def _params_struct(cfg):
+    from ..models import transformer
+    key = _sds((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: transformer.init_params(k, cfg), key)
+
+
+def _expect_logits(got, batch: int, vocab: int, arch: str, path: str,
+                   failures: list):
+    if tuple(got.shape) != (batch, vocab):
+        failures.append(ContractFailure(
+            arch, path, f"logits shape {tuple(got.shape)} != "
+                        f"({batch}, {vocab})"))
+    if got.dtype != jnp.float32:
+        failures.append(ContractFailure(
+            arch, path, f"logits dtype {got.dtype} != float32 (serving "
+                        f"contract: fp32 logits regardless of "
+                        f"compute_dtype)"))
+
+
+def _check_model_paths(cfg, params, failures: list) -> list[str]:
+    """prefill / decode / ragged / paged legs for one arch.  Returns the
+    list of (path, reason) skips."""
+    from ..models import transformer
+    from ..serving import kvpool
+    arch = cfg.name
+    skips: list[tuple[str, str]] = []
+
+    # -- prefill (dense) + decode ------------------------------------------
+    batch = _batch_struct(cfg, _B, _S)
+    logits, cache = jax.eval_shape(
+        lambda p, b: transformer.prefill(p, cfg, b, s_max=_SMAX),
+        params, batch)
+    _expect_logits(logits, _B, cfg.vocab, arch, "prefill", failures)
+    toks = _sds((_B,), jnp.int32)
+    logits_d, _ = jax.eval_shape(
+        lambda p, c, t: transformer.decode_step(p, cfg, c, t),
+        params, cache, toks)
+    _expect_logits(logits_d, _B, cfg.vocab, arch, "decode", failures)
+
+    # -- ragged prefill + decode (left-pad vector rides in the cache) ------
+    pad = _sds((_B,), jnp.int32)
+    logits_r, cache_r = jax.eval_shape(
+        lambda p, b, pd: transformer.prefill(p, cfg, b, s_max=_SMAX, pad=pd),
+        params, batch, pad)
+    _expect_logits(logits_r, _B, cfg.vocab, arch, "ragged", failures)
+    jax.eval_shape(lambda p, c, t: transformer.decode_step(p, cfg, c, t),
+                   params, cache_r, toks)
+
+    # -- paged decode + the commit_prefill admission bridge ----------------
+    try:
+        kvpool._check_pattern(cfg)
+    except ValueError as e:
+        skips.append(("paged", str(e).split(";")[0]))
+        return skips
+    n_blocks = _SLOTS * (_SMAX // _BLOCK) + 1
+    state = jax.eval_shape(
+        lambda p: kvpool.init_decode_state(cfg, p, _SLOTS, n_blocks, _BLOCK),
+        params)
+    table = _sds((_SLOTS, -(-_SMAX // _BLOCK)), jnp.int32)
+    lens = _sds((_SLOTS,), jnp.int32)
+    toks_s = _sds((_SLOTS,), jnp.int32)
+    logits_p, state2 = jax.eval_shape(
+        lambda p, st, t, bt, sl: transformer.decode_step_paged(
+            p, cfg, st, t, bt, sl),
+        params, state, toks_s, table, lens)
+    _expect_logits(logits_p, _SLOTS, cfg.vocab, arch, "paged", failures)
+    if jax.tree.structure(state2) != jax.tree.structure(state):
+        failures.append(ContractFailure(
+            arch, "paged", "decode_step_paged changed the pool-state "
+                           "treedef (engine threads it tick to tick)"))
+
+    # admission: a solo (batch-1) bucketed prefill commits into the pool
+    solo_batch = _batch_struct(cfg, 1, 16)
+    _, solo = jax.eval_shape(
+        lambda p, b, pd: transformer.prefill(p, cfg, b, s_max=16, pad=pd),
+        params, solo_batch, _sds((1,), jnp.int32))
+    solo_core = {"units": solo["units"], "tail": solo["tail"]}
+    ids = _sds((-(-16 // _BLOCK),), jnp.int32)
+    scalar = _sds((), jnp.int32)
+    committed = jax.eval_shape(
+        lambda st, so, pd, sl, bi: kvpool.commit_prefill(
+            st, so, pd, sl, bi, block_size=_BLOCK),
+        state, solo_core, scalar, scalar, ids)
+    if jax.tree.structure(committed) != jax.tree.structure(state):
+        failures.append(ContractFailure(
+            arch, "paged", "commit_prefill changed the pool-state treedef"))
+    return skips
+
+
+def _check_pspecs(cfg, params, failures: list):
+    """Every param leaf x every model degree: named axes must divide."""
+    from ..launch.sharding import _path_str, param_spec
+    arch = cfg.name
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    for m in MODEL_DEGREES:
+        mesh = ShapeOnlyMesh(cells=1, model=m)
+        for path, leaf in leaves:
+            pstr = _path_str(path)
+            spec = param_spec(mesh, cfg, pstr, leaf.shape)
+            for dim, axes in enumerate(tuple(spec)):
+                if axes is None:
+                    continue
+                names = axes if isinstance(axes, tuple) else (axes,)
+                total = math.prod(mesh.shape[a] for a in names)
+                if dim >= len(leaf.shape) or leaf.shape[dim] % total:
+                    failures.append(ContractFailure(
+                        arch, "pspec",
+                        f"{pstr}: dim {dim} of shape {tuple(leaf.shape)} "
+                        f"not divisible by {names}={total} (model={m})"))
+
+
+def run_contracts(arch_names=None, *, verbose: bool = False) -> ContractReport:
+    configs = config_base.load_all()
+    if arch_names:
+        configs = {n: configs[n] for n in arch_names}
+    t0 = time.perf_counter()
+    failures: list[ContractFailure] = []
+    covered: list[tuple[str, str]] = []
+    skipped: list[tuple[str, str, str]] = []
+    for name, cfg in sorted(configs.items()):
+        t1 = time.perf_counter()
+        try:
+            params = _params_struct(cfg)
+        except Exception as e:           # an arch that cannot even build
+            failures.append(ContractFailure(name, "init", repr(e)))
+            continue
+        try:
+            skips = _check_model_paths(cfg, params, failures)
+        except Exception as e:
+            failures.append(ContractFailure(name, "trace", repr(e)))
+            skips = []
+        skip_paths = {p for p, _ in skips}
+        covered.extend((name, p) for p in ("prefill", "decode", "ragged"))
+        covered.extend((name, p) for p in ("paged",) if p not in skip_paths)
+        skipped.extend((name, p, why) for p, why in skips)
+        try:
+            _check_pspecs(cfg, params, failures)
+            covered.append((name, "pspec"))
+        except Exception as e:
+            failures.append(ContractFailure(name, "pspec", repr(e)))
+        if verbose:
+            print(f"  {name}: {time.perf_counter() - t1:.2f}s")
+    return ContractReport(covered=tuple(covered), skipped=tuple(skipped),
+                          failures=tuple(failures),
+                          elapsed_s=time.perf_counter() - t0)

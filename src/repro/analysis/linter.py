@@ -1,0 +1,80 @@
+"""reprolint driver: walk the linted tree, run rules, apply suppressions
+and the baseline.
+
+The linted surface is everything that ships behavior -- ``src/repro``,
+``benchmarks``, ``scripts``, ``examples`` -- but not ``tests/`` (tests
+intentionally poke failure modes the rules exist to flag).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from . import findings as F
+from .rules import RULES, FileContext
+
+DEFAULT_PATHS = ("src/repro", "benchmarks", "scripts", "examples")
+BASELINE_NAME = "analysis_baseline.json"
+
+
+def repo_root() -> pathlib.Path:
+    """The repository root: three levels up from this package
+    (src/repro/analysis -> repo)."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def iter_py_files(paths, root: pathlib.Path):
+    for p in paths:
+        p = (root / p) if not pathlib.Path(p).is_absolute() \
+            else pathlib.Path(p)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+
+
+def lint_source(source: str, path: str,
+                rules=None) -> list[F.Finding]:
+    """Lint one source string; ``path`` is the repo-relative label.
+    Suppression comments apply; the baseline does not (caller's job)."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [F.Finding(rule="parse-error", path=path,
+                          line=e.lineno or 1, col=e.offset or 1,
+                          message=f"syntax error: {e.msg}")]
+    lines = source.splitlines()
+    ctx = FileContext(path=path, source_lines=lines, tree=tree)
+    supp = F.suppressions(lines)
+    out: list[F.Finding] = []
+    for rule in (rules or RULES.values()):
+        for f in rule.check(ctx):
+            if not F.is_suppressed(f, supp):
+                out.append(f)
+    out.sort(key=lambda f: (f.line, f.col, f.rule))
+    return out
+
+
+def lint_paths(paths=DEFAULT_PATHS, root=None,
+               rules=None) -> list[F.Finding]:
+    root = pathlib.Path(root) if root else repo_root()
+    selected = None
+    if rules:
+        selected = [RULES[name] for name in rules]
+    out: list[F.Finding] = []
+    for file in iter_py_files(paths, root):
+        rel = file.relative_to(root).as_posix() \
+            if file.is_relative_to(root) else file.as_posix()
+        out.extend(lint_source(file.read_text(), rel, rules=selected))
+    return out
+
+
+def apply_baseline(found: list[F.Finding], root=None,
+                   baseline_path=None):
+    """Returns (new_findings, grandfathered, baseline_dict)."""
+    root = pathlib.Path(root) if root else repo_root()
+    path = pathlib.Path(baseline_path) if baseline_path \
+        else root / BASELINE_NAME
+    baseline = F.load_baseline(path)
+    new, old = F.split_baselined(found, baseline)
+    return new, old, baseline

@@ -1,0 +1,119 @@
+"""Retrace counter: assert steady-state programs compile a bounded number
+of times.
+
+Two probes, both on smoke-size configs so the whole check stays
+CPU-cheap:
+
+* **Serving**: drive a continuous-batching :class:`ServingEngine` through
+  two waves of mixed-length prompts.  Wave one may compile (one prefill
+  per touched bucket, one paged decode, one commit per bucket); wave two
+  must compile NOTHING -- ``prefill_compiles`` stays flat and the paged
+  decode jit cache stays at one entry.
+
+* **ScenarioGrid rollouts**: a jitted ``make_rollout`` program invoked
+  with three different keys must hold exactly one cache entry (keys are
+  data, not shape).
+
+Both rely on ``jax.jit``'s ``_cache_size()`` introspection; if a future
+jax drops it the probes report a skip rather than a false pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class RetraceFailure:
+    probe: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.probe}: {self.message}"
+
+
+def _cache_size(fn) -> int | None:
+    try:
+        return fn._cache_size()
+    except AttributeError:
+        return None
+
+
+def serving_retraces(arch: str = "qwen3-0.6b") -> list[RetraceFailure]:
+    from ..configs.base import get_config, reduced
+    from ..models import transformer
+    from ..serving.engine import Request, ServingEngine
+
+    failures: list[RetraceFailure] = []
+    cfg = reduced(get_config(arch))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, slots=2, s_max=64)
+    rng = np.random.default_rng(0)
+
+    def wave(lengths, base_rid):
+        for i, n in enumerate(lengths):
+            eng.submit(Request(
+                rid=base_rid + i,
+                prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                max_new=4))
+        eng.run_until_idle()
+
+    wave([5, 9, 17, 12, 3], 0)           # buckets 8, 16, 32 (all ragged)
+    first = eng.prefill_compiles
+    buckets_touched = 3
+    if first > buckets_touched:
+        failures.append(RetraceFailure(
+            "serving", f"wave 1 compiled {first} prefill signatures for "
+                       f"{buckets_touched} buckets"))
+    wave([6, 11, 20, 4, 13], 100)        # same buckets, new lengths
+    if eng.prefill_compiles != first:
+        failures.append(RetraceFailure(
+            "serving", f"steady state recompiled prefill: "
+                       f"{first} -> {eng.prefill_compiles} signatures on "
+                       f"identical buckets"))
+    for name in ("_decode_paged", "_commit"):
+        size = _cache_size(getattr(eng, name))
+        if size is None:
+            failures.append(RetraceFailure(
+                "serving", f"jit cache introspection unavailable for "
+                           f"{name} (jax dropped _cache_size?)"))
+        elif name == "_decode_paged" and size != 1:
+            failures.append(RetraceFailure(
+                "serving", f"paged decode holds {size} compiled programs; "
+                           f"steady state must hold exactly 1"))
+        elif name == "_commit" and size > buckets_touched:
+            failures.append(RetraceFailure(
+                "serving", f"commit holds {size} compiled programs for "
+                           f"{buckets_touched} buckets"))
+    return failures
+
+
+def rollout_retraces() -> list[RetraceFailure]:
+    from ..core.scenarios import grid_from_names
+
+    failures: list[RetraceFailure] = []
+    grid = grid_from_names([("fixed_rate", {"rate": 0.5}),
+                            ("fixed_rate", {"rate": 1.0}),
+                            ("fixed_rate", {"rate": 2.5})])
+    fn = grid.make_rollout("oracle", steps=4)
+    key = jax.random.PRNGKey(0)
+    for i in range(3):
+        jax.block_until_ready(fn(jax.random.fold_in(key, i)))
+    size = _cache_size(fn)
+    if size is None:
+        failures.append(RetraceFailure(
+            "rollout", "jit cache introspection unavailable "
+                       "(jax dropped _cache_size?)"))
+    elif size != 1:
+        failures.append(RetraceFailure(
+            "rollout", f"ScenarioGrid rollout holds {size} compiled "
+                       f"programs after 3 same-shape calls; keys are data, "
+                       f"not shape -- expected exactly 1"))
+    return failures
+
+
+def run_retrace() -> list[RetraceFailure]:
+    return serving_retraces() + rollout_retraces()

@@ -1,0 +1,761 @@
+"""reprolint rules: AST checks for the JAX failure modes this codebase hits.
+
+Five rules, each encoding a contract the test suite can only catch
+indirectly (a numeric parity test happens to trip) or not at all (a silent
+retrace).  See docs/analysis.md for the catalogue with examples.
+
+``key-reuse``         a PRNG key consumed twice with no split/fold_in between
+``jit-branch``        Python ``if``/``while`` on values flowing from a jitted
+                      function's (non-static) array arguments
+``recompile-hazard``  jit objects built per call / inside loops, unhashable
+                      static_argnums, shape-varying values reaching jit call
+                      sites outside the bucketing helpers
+``host-sync``         ``.item()`` / ``float()`` / ``np.asarray()`` on device
+                      values inside serving-tick / decode hot loops
+``pallas-wrapper``    Pallas kernel modules imported anywhere but
+                      ``kernels/ops.py`` (the wrapper that owns tile padding)
+
+All rules share one `FileContext` that resolves import aliases
+(``import jax.numpy as jnp`` etc.) so matching is on canonical dotted names.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .findings import Finding
+
+# ---------------------------------------------------------------------------
+# shared per-file context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FileContext:
+    path: str                       # repo-relative, posix
+    source_lines: list[str]
+    tree: ast.Module
+    aliases: dict[str, str] = dataclasses.field(default_factory=dict)
+    jit_bound: set[str] = dataclasses.field(default_factory=set)
+
+    def __post_init__(self):
+        self.aliases = _collect_aliases(self.tree)
+        self.jit_bound = _collect_jit_bound(self)
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.source_lines):
+            return self.source_lines[line - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(rule=rule, path=self.path, line=line,
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, snippet=self.snippet(line))
+
+    def dotted(self, node) -> str | None:
+        """Canonical dotted name of an expression, alias-resolved
+        (``jnp.argmax`` -> ``jax.numpy.argmax``), or None."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(self.aliases.get(node.id, node.id))
+        elif isinstance(node, ast.Call):
+            return None
+        else:
+            return None
+        return ".".join(reversed(parts))
+
+    def is_call_to(self, node, *names: str) -> bool:
+        return (isinstance(node, ast.Call)
+                and self.dotted(node.func) in names)
+
+
+def _collect_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _collect_jit_bound(ctx: FileContext) -> set[str]:
+    """Names/attrs anywhere in the module bound to a ``jax.jit(...)`` result
+    (possibly through a wrapper call like ``shard_ctx(mesh, jax.jit(f))``)."""
+    bound: set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        has_jit = any(ctx.is_call_to(sub, "jax.jit")
+                      for sub in ast.walk(node.value))
+        if not has_jit:
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                bound.add(tgt.id)
+            elif (isinstance(tgt, ast.Attribute)
+                  and isinstance(tgt.value, ast.Name)):
+                bound.add(f"{tgt.value.id}.{tgt.attr}")
+    return bound
+
+
+def _func_defs(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _terminates(body: list[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+# ---------------------------------------------------------------------------
+# rule: key-reuse
+# ---------------------------------------------------------------------------
+
+_KEY_FACTORIES = ("jax.random.PRNGKey", "jax.random.key",
+                  "jax.random.fold_in", "jax.random.wrap_key_data")
+_KEY_SPLIT = "jax.random.split"
+# calls that *derive from* a key without consuming it
+_NON_CONSUMING = ("jax.random.fold_in", "jax.random.key_data",
+                  "jax.random.clone", "jax.random.key_impl")
+
+
+class _KeyScope:
+    """Linear abstract interpreter over one function body tracking which
+    names hold unconsumed PRNG keys (or arrays of keys from ``split``)."""
+
+    def __init__(self, ctx: FileContext, rule: "KeyReuseRule"):
+        self.ctx = ctx
+        self.rule = rule
+        self.findings: list[Finding] = []
+        self.keys: dict[str, int | None] = {}       # name -> consuming line
+        self.elems: dict[str, dict[str, int]] = {}  # array name -> idx -> line
+
+    # -- expression side: consumption ------------------------------------
+
+    def use(self, expr: ast.expr | None):
+        if expr is None:
+            return
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = self.ctx.dotted(node.func)
+            if callee in _NON_CONSUMING:
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            for a in args:
+                self._consume_arg(a, node)
+
+    def _consume_arg(self, arg, call):
+        if isinstance(arg, ast.Name) and arg.id in self.keys:
+            prev = self.keys[arg.id]
+            if prev is not None:
+                self.findings.append(self.ctx.finding(
+                    self.rule.name, call,
+                    f"PRNG key '{arg.id}' reused: already consumed at line "
+                    f"{prev} with no split/fold_in in between"))
+            else:
+                self.keys[arg.id] = call.lineno
+        elif (isinstance(arg, ast.Subscript)
+              and isinstance(arg.value, ast.Name)
+              and arg.value.id in self.elems):
+            idx = _const_index(arg.slice)
+            if idx is None:
+                return                     # dynamic index: can't track
+            seen = self.elems[arg.value.id]
+            if idx in seen:
+                self.findings.append(self.ctx.finding(
+                    self.rule.name, call,
+                    f"PRNG key '{arg.value.id}[{idx}]' reused: already "
+                    f"consumed at line {seen[idx]}"))
+            else:
+                seen[idx] = call.lineno
+
+    # -- binding side ----------------------------------------------------
+
+    def _kind(self, expr) -> str | None:
+        """'key' | 'array' | None for an RHS expression."""
+        if self.ctx.is_call_to(expr, *_KEY_FACTORIES):
+            return "key"
+        if self.ctx.is_call_to(expr, _KEY_SPLIT):
+            return "array"
+        if isinstance(expr, ast.Name) and expr.id in self.keys:
+            return "key"
+        if (isinstance(expr, ast.Subscript)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id in self.elems):
+            return "key"
+        return None
+
+    def bind_name(self, name: str, kind: str | None):
+        self.keys.pop(name, None)
+        self.elems.pop(name, None)
+        if kind == "key":
+            self.keys[name] = None
+        elif kind == "array":
+            self.elems[name] = {}
+
+    def assign(self, targets, value):
+        self.use(value)
+        kind = self._kind(value)
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                self.bind_name(tgt.id, kind)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                # `k1, k2 = jax.random.split(key)` -> each elt a fresh key
+                elt_kind = "key" if kind == "array" else None
+                for elt in tgt.elts:
+                    if isinstance(elt, ast.Name):
+                        self.bind_name(elt.id, elt_kind)
+            # attribute/subscript targets: no tracking
+
+    # -- statements ------------------------------------------------------
+
+    def run(self, body: list[ast.stmt]):
+        for stmt in body:
+            self.stmt(stmt)
+
+    def copy(self) -> "_KeyScope":
+        s = _KeyScope.__new__(_KeyScope)
+        s.ctx, s.rule, s.findings = self.ctx, self.rule, self.findings
+        s.keys = dict(self.keys)
+        s.elems = {k: dict(v) for k, v in self.elems.items()}
+        return s
+
+    def merge(self, branches: list["_KeyScope"]):
+        for b in branches:
+            for name, line in b.keys.items():
+                if name in self.keys and line is not None:
+                    if self.keys[name] is None:
+                        self.keys[name] = line
+            for name, seen in b.elems.items():
+                if name in self.elems:
+                    for idx, line in seen.items():
+                        self.elems[name].setdefault(idx, line)
+
+    def stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            self.assign(stmt.targets, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.assign([stmt.target], stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            self.use(stmt.value)
+        elif isinstance(stmt, (ast.Expr, ast.Delete, ast.Assert)):
+            self.use(getattr(stmt, "value", None) or getattr(stmt, "test", None))
+        elif isinstance(stmt, ast.Return):
+            pass                       # returning a key hands off ownership
+        elif isinstance(stmt, ast.If):
+            self.use(stmt.test)
+            taken = []
+            for branch in (stmt.body, stmt.orelse):
+                scope = self.copy()
+                scope.run(branch)
+                if not _terminates(branch):
+                    taken.append(scope)
+            self.merge(taken)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.use(stmt.iter)
+            iter_kind = self._kind(stmt.iter)
+            # two passes over the body to catch cross-iteration reuse;
+            # the loop target rebinds fresh each pass
+            for _ in range(2):
+                if isinstance(stmt.target, ast.Name):
+                    self.bind_name(
+                        stmt.target.id,
+                        "key" if iter_kind == "array" else None)
+                elif isinstance(stmt.target, (ast.Tuple, ast.List)):
+                    for elt in stmt.target.elts:
+                        if isinstance(elt, ast.Name):
+                            self.bind_name(elt.id, None)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            for _ in range(2):
+                self.use(stmt.test)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.use(item.context_expr)
+            self.run(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run(stmt.body)
+            for h in stmt.handlers:
+                self.run(h.body)
+            self.run(stmt.orelse)
+            self.run(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            pass                       # nested scopes analyzed separately
+
+
+def _const_index(node) -> str | None:
+    if isinstance(node, ast.Constant):
+        return repr(node.value)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub) \
+            and isinstance(node.operand, ast.Constant):
+        return f"-{node.operand.value!r}"
+    return None
+
+
+class KeyReuseRule:
+    name = "key-reuse"
+    description = ("a PRNG key is passed to two consumers with no "
+                   "split/fold_in between them")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        findings: list[Finding] = []
+        scopes = [ctx.tree.body] + [f.body for f in _func_defs(ctx.tree)]
+        for body in scopes:
+            scope = _KeyScope(ctx, self)
+            scope.run(body)
+            findings.extend(scope.findings)
+        # the module-body scope re-walks nothing (nested defs skipped), but
+        # dedupe anyway in case of overlapping scopes
+        out, seen = [], set()
+        for f in findings:
+            key = (f.line, f.col, f.message)
+            if key not in seen:
+                seen.add(key)
+                out.append(f)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# rule: jit-branch
+# ---------------------------------------------------------------------------
+
+# attribute/function forms that turn a traced value into static Python data
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = ("len", "isinstance", "type")
+
+
+def _jitted_functions(ctx: FileContext):
+    """Yield (FunctionDef-or-Lambda, static_param_names) for every function
+    the module hands to ``jax.jit`` -- by decorator, by ``jax.jit(f)``
+    wrapping of a local def, or as an inline lambda."""
+    local_defs = {f.name: f for f in _func_defs(ctx.tree)}
+    seen: set[int] = set()
+
+    def statics(call: ast.Call | None, fn) -> set[str]:
+        names: set[str] = set()
+        if call is None:
+            return names
+        posargs = [a.arg for a in fn.args.args]
+        for kw in call.keywords:
+            vals = []
+            if isinstance(kw.value, ast.Constant):
+                vals = [kw.value.value]
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                vals = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)]
+            if kw.arg == "static_argnames":
+                names.update(v for v in vals if isinstance(v, str))
+            elif kw.arg == "static_argnums":
+                for v in vals:
+                    if isinstance(v, int) and v < len(posargs):
+                        names.add(posargs[v])
+        return names
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for deco in node.decorator_list:
+                call = deco if isinstance(deco, ast.Call) else None
+                target = call.func if call else deco
+                if ctx.dotted(target) == "jax.jit" and id(node) not in seen:
+                    seen.add(id(node))
+                    yield node, statics(call, node)
+        elif ctx.is_call_to(node, "jax.jit") and node.args:
+            fn = node.args[0]
+            if isinstance(fn, ast.Lambda) and id(fn) not in seen:
+                seen.add(id(fn))
+                yield fn, statics(node, fn)
+            elif isinstance(fn, ast.Name) and fn.id in local_defs:
+                target = local_defs[fn.id]
+                if id(target) not in seen:
+                    seen.add(id(target))
+                    yield target, statics(node, target)
+
+
+def _prune_static(expr: ast.expr) -> ast.expr | None:
+    """Copy ``expr`` with statically-safe subtrees removed: ``.shape`` /
+    ``.ndim`` / ``.dtype`` / ``.size`` chains, len()/isinstance()/type()
+    calls, and ``x is None`` comparisons."""
+
+    class Pruner(ast.NodeTransformer):
+        def visit_Attribute(self, node):
+            if node.attr in _SHAPE_ATTRS:
+                return None
+            return self.generic_visit(node)
+
+        def visit_Call(self, node):
+            func = node.func
+            if isinstance(func, ast.Name) and func.id in _STATIC_CALLS:
+                return None
+            return self.generic_visit(node)
+
+        def visit_Compare(self, node):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                    and all(isinstance(c, ast.Constant) and c.value is None
+                            for c in node.comparators):
+                return None
+            return self.generic_visit(node)
+
+    import copy
+    return Pruner().visit(copy.deepcopy(expr))
+
+
+def _names_in(expr: ast.expr | None) -> set[str]:
+    if expr is None:
+        return set()
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+class _TaintScope:
+    def __init__(self, ctx: FileContext, rule, tainted: set[str]):
+        self.ctx, self.rule = ctx, rule
+        self.tainted = set(tainted)
+        self.findings: list[Finding] = []
+
+    def rhs_tainted(self, expr) -> bool:
+        return bool(_names_in(_prune_static(expr)) & self.tainted)
+
+    def run(self, body):
+        for stmt in body:
+            self.stmt(stmt)
+
+    def _bind(self, targets, tainted: bool):
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                (self.tainted.add if tainted
+                 else self.tainted.discard)(tgt.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                self._bind(tgt.elts, tainted)
+
+    def _check_test(self, node, test, kind: str):
+        pruned = _prune_static(test)
+        hit = _names_in(pruned) & self.tainted
+        if hit:
+            self.findings.append(self.ctx.finding(
+                self.rule.name, node,
+                f"Python `{kind}` branches on {sorted(hit)} which flows from "
+                f"a jitted function's array arguments (tracer leak: use "
+                f"lax.cond/where, or mark the argument static)"))
+
+    def stmt(self, stmt):
+        if isinstance(stmt, ast.Assign):
+            self._bind(stmt.targets, self.rhs_tainted(stmt.value))
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind([stmt.target], self.rhs_tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if isinstance(stmt.target, ast.Name) \
+                    and self.rhs_tainted(stmt.value):
+                self.tainted.add(stmt.target.id)
+        elif isinstance(stmt, ast.If):
+            self._check_test(stmt, stmt.test, "if")
+            self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            self._check_test(stmt, stmt.test, "while")
+            self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.Assert):
+            self._check_test(stmt, stmt.test, "assert")
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._bind([stmt.target], self.rhs_tainted(stmt.iter))
+            self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            self.run(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run(stmt.body)
+            for h in stmt.handlers:
+                self.run(h.body)
+            self.run(stmt.orelse)
+            self.run(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs (scan bodies etc.) run traced too: their params
+            # are traced values, and they close over the outer taint
+            inner = _TaintScope(self.ctx, self.rule, self.tainted | {
+                a.arg for a in stmt.args.args})
+            inner.findings = self.findings
+            inner.run(stmt.body)
+        elif isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.IfExp):
+            pass                       # value-level select: harmless
+
+
+class JitBranchRule:
+    name = "jit-branch"
+    description = ("Python if/while branches on a value flowing from a "
+                   "jitted function's array arguments")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        findings: list[Finding] = []
+        for fn, static_names in _jitted_functions(ctx):
+            if isinstance(fn, ast.Lambda):
+                continue               # lambdas cannot contain statements
+            params = {a.arg for a in fn.args.args} - static_names - {"self"}
+            scope = _TaintScope(ctx, self, params)
+            scope.run(fn.body)
+            findings.extend(scope.findings)
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: recompile-hazard
+# ---------------------------------------------------------------------------
+
+# numpy/jnp constructors whose non-constant size/width argument makes the
+# result's SHAPE vary call to call
+_SHAPE_MAKERS = ("numpy.pad", "jax.numpy.pad", "numpy.zeros", "numpy.full",
+                 "numpy.empty", "numpy.stack", "jax.numpy.zeros",
+                 "jax.numpy.full")
+
+
+def _has_nonconst_dims(call: ast.Call) -> bool:
+    """First positional arg (shape / pad-width) is not a plain constant."""
+    if not call.args:
+        return False
+    arg = call.args[0]
+    for node in ast.walk(arg):
+        if isinstance(node, ast.Name):
+            return True
+    return False
+
+
+class RecompileHazardRule:
+    name = "recompile-hazard"
+    description = ("jit objects rebuilt per call or per loop iteration; "
+                   "shape-varying values reaching jit call sites outside "
+                   "the bucketing helpers")
+
+    # a function that routes widths through `*_bucket*` is a sanctioned
+    # bucketing helper: its shape variation is bounded by the bucket ladder
+    def _is_bucketing_helper(self, fn) -> bool:
+        if "_bucket" in fn.name:
+            return True
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = node.func
+                if isinstance(callee, ast.Attribute) \
+                        and "_bucket" in callee.attr:
+                    return True
+                if isinstance(callee, ast.Name) and "_bucket" in callee.id:
+                    return True
+        return False
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            # (a) jax.jit(...)(...) built and invoked inline
+            if isinstance(node, ast.Call) \
+                    and ctx.is_call_to(node.func, "jax.jit"):
+                findings.append(ctx.finding(
+                    self.name, node,
+                    "jax.jit(...) created and called inline: every call "
+                    "retraces -- bind the jitted function once"))
+            # (c) unhashable static_argnums/static_argnames values
+            if ctx.is_call_to(node, "jax.jit"):
+                for kw in node.keywords:
+                    if kw.arg in ("static_argnums", "static_argnames") \
+                            and isinstance(kw.value, (ast.List, ast.Dict,
+                                                      ast.Set)):
+                        findings.append(ctx.finding(
+                            self.name, kw.value,
+                            f"{kw.arg} uses an unhashable "
+                            f"{type(kw.value).__name__.lower()} literal -- "
+                            f"use a tuple"))
+            # (b) jit object created inside a loop body
+            if isinstance(node, (ast.For, ast.While)):
+                for sub in ast.walk(node):
+                    if sub is not node and ctx.is_call_to(sub, "jax.jit"):
+                        findings.append(ctx.finding(
+                            self.name, sub,
+                            "jax.jit(...) created inside a loop: hoist it "
+                            "out (each construction starts a fresh trace "
+                            "cache)"))
+        # (d) shape-varying args at jit call sites outside bucketing helpers
+        for fn in _func_defs(ctx.tree):
+            if self._is_bucketing_helper(fn):
+                continue
+            varying: set[str] = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and isinstance(
+                        node.value, ast.Call):
+                    callee = ctx.dotted(node.value.func)
+                    if callee in _SHAPE_MAKERS \
+                            and _has_nonconst_dims(node.value):
+                        for tgt in node.targets:
+                            if isinstance(tgt, ast.Name):
+                                varying.add(tgt.id)
+                elif isinstance(node, ast.Call):
+                    callee = ctx.dotted(node.func)
+                    if callee in ctx.jit_bound and varying:
+                        used = set()
+                        for a in list(node.args) + [k.value
+                                                    for k in node.keywords]:
+                            used |= _names_in(a) & varying
+                        if used:
+                            findings.append(ctx.finding(
+                                self.name, node,
+                                f"shape-varying value {sorted(used)} reaches "
+                                f"jitted call '{callee}' outside a bucketing "
+                                f"helper: every distinct width recompiles"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: host-sync
+# ---------------------------------------------------------------------------
+
+# (path-suffix, function names): the serving tick/admission hot path, where
+# one stray device->host round trip serializes every slot's decode step
+HOT_ZONES = (
+    ("serving/engine.py", ("_step_continuous", "_step_sync",
+                           "_admit_continuous", "_admit_sync",
+                           "_solo_prefill", "_grow_blocks", "step")),
+)
+
+_SYNC_WRAPPERS = ("float", "int", "bool", "numpy.asarray", "numpy.array",
+                  "jax.device_get")
+_DEVICE_PRODUCERS = ("jax.", "jax.numpy.")
+
+
+class HostSyncRule:
+    name = "host-sync"
+    description = (".item()/float()/np.asarray() on device values inside "
+                   "the serving tick / decode / rollout hot loops")
+
+    def _hot_functions(self, ctx: FileContext):
+        for suffix, names in HOT_ZONES:
+            if ctx.path.endswith(suffix):
+                for fn in _func_defs(ctx.tree):
+                    if fn.name in names:
+                        yield fn, f"hot zone {suffix}:{fn.name}"
+        # auto zones: any loop body that dispatches to a jit-bound callable
+        # is a steady-state loop; syncs inside it stall the pipeline
+        for fn in _func_defs(ctx.tree):
+            for node in ast.walk(fn):
+                if not isinstance(node, (ast.For, ast.While)):
+                    continue
+                calls_jit = any(
+                    isinstance(sub, ast.Call)
+                    and ctx.dotted(sub.func) in ctx.jit_bound
+                    for sub in ast.walk(node))
+                if calls_jit:
+                    yield node, f"loop in {fn.name} dispatching jitted work"
+
+    def _device_expr(self, ctx, expr, tainted: set[str]) -> bool:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in tainted:
+                return True
+            if isinstance(node, ast.Call):
+                callee = ctx.dotted(node.func)
+                if callee and (callee in ctx.jit_bound
+                               or callee.startswith(_DEVICE_PRODUCERS)):
+                    return True
+        return False
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        findings: list[Finding] = []
+        reported: set[int] = set()
+        for zone, where in self._hot_functions(ctx):
+            tainted: set[str] = set()
+            for node in ast.walk(zone):
+                # taint: names assigned from jitted dispatch / jnp ops
+                if isinstance(node, ast.Assign):
+                    is_dev = self._device_expr(ctx, node.value, tainted)
+                    is_sync = self._sync_call(ctx, node.value, tainted)
+                    for tgt in node.targets:
+                        names = [tgt] if isinstance(tgt, ast.Name) else [
+                            e for e in getattr(tgt, "elts", [])
+                            if isinstance(e, ast.Name)]
+                        for n in names:
+                            if is_dev and not is_sync:
+                                tainted.add(n.id)
+                            else:
+                                tainted.discard(n.id)
+                if isinstance(node, ast.Call) and node.lineno not in reported:
+                    if self._sync_call(ctx, node, tainted):
+                        reported.add(node.lineno)
+                        findings.append(ctx.finding(
+                            self.name, node,
+                            f"host-device sync "
+                            f"('{ctx.snippet(node.lineno)[:48]}') inside "
+                            f"{where}: forces the device pipeline to drain "
+                            f"every tick"))
+        return findings
+
+    def _sync_call(self, ctx, expr, tainted) -> bool:
+        """Is ``expr`` (or its outermost call) a blocking host transfer of a
+        device value?"""
+        if not isinstance(expr, ast.Call):
+            return False
+        func = expr.func
+        if isinstance(func, ast.Attribute) and func.attr == "item":
+            return self._device_expr(ctx, func.value, tainted)
+        callee = ctx.dotted(func)
+        if callee in _SYNC_WRAPPERS and expr.args:
+            return self._device_expr(ctx, expr.args[0], tainted)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# rule: pallas-wrapper
+# ---------------------------------------------------------------------------
+
+_KERNEL_MODULES = ("flash_attention", "decode_attention", "ssd_scan",
+                   "rglru_scan", "partition_sweep")
+
+
+class PallasWrapperRule:
+    name = "pallas-wrapper"
+    description = ("Pallas kernels must be reached through kernels/ops.py "
+                   "(the wrapper owns tile padding); direct kernel-module "
+                   "or pallas imports elsewhere are flagged")
+
+    def check(self, ctx: FileContext) -> list[Finding]:
+        if "kernels/" in ctx.path and not ctx.path.endswith("kernels/ref.py"):
+            return []
+        findings = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("jax.experimental.pallas"):
+                        findings.append(ctx.finding(
+                            self.name, node,
+                            "direct Pallas import outside kernels/: route "
+                            "through a repro.kernels.ops wrapper"))
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mod = node.module
+                if mod.startswith("jax.experimental") and "pallas" in mod \
+                        or mod == "jax.experimental" and any(
+                            a.name == "pallas" for a in node.names):
+                    findings.append(ctx.finding(
+                        self.name, node,
+                        "direct Pallas import outside kernels/: route "
+                        "through a repro.kernels.ops wrapper"))
+                    continue
+                tail = mod.rsplit(".", 1)[-1]
+                if tail in _KERNEL_MODULES and (
+                        "kernels" in mod or node.level > 0):
+                    findings.append(ctx.finding(
+                        self.name, node,
+                        f"kernel module '{tail}' imported directly: its "
+                        f"entry points assume tile-aligned shapes -- import "
+                        f"the padded wrapper from repro.kernels.ops"))
+        return findings
+
+
+RULES = {r.name: r for r in (KeyReuseRule(), JitBranchRule(),
+                             RecompileHazardRule(), HostSyncRule(),
+                             PallasWrapperRule())}

@@ -16,8 +16,6 @@ Both also provide the *joint* variant used by the paper's "PPO" baseline
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
@@ -143,7 +141,6 @@ class JointGaussianPolicy(GaussianTanhPolicy):
 
     def split(self, y):
         """y (.., 4N) -> (cut, alpha, f_ue, f_es)."""
-        n = self._n
         y_cut, y_alpha, y_fue, y_fes = jnp.split(y, 4, axis=-1)
         cut = map_cut(y_cut, self.num_layers)
         alpha = jax.nn.softmax(y_alpha, axis=-1)

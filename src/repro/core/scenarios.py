@@ -44,7 +44,7 @@ import numpy as np
 from ..profiling.profiles import LayerProfile
 from ..traffic import processes as traffic
 from . import gridshard, sweep
-from .env import (LAM_FIXED, LAM_IID_UNIFORM, LAM_PEAK, LAM_TRACE, MecConfig,
+from .env import (LAM_FIXED, LAM_PEAK, LAM_TRACE, MecConfig,
                   MecEnv, MecParams, MecState, SlotResult, free_space_gain,
                   make_params, reset_p, step_p)
 
@@ -545,7 +545,7 @@ class ScenarioGrid:
             from ..kernels.ref import partition_sweep_batched_ref
             return partition_sweep_batched_ref(*args)
         if backend == "pallas":
-            from ..kernels.partition_sweep import partition_sweep_batched
+            from ..kernels.ops import partition_sweep_batched
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"
             return partition_sweep_batched(*args, interpret=interpret)

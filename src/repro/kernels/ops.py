@@ -137,3 +137,16 @@ def partition_sweep(macs, params_b, acts, psi, L, lam, gain, q_energy,
                                       interpret=_INTERPRET)
     return ref.partition_sweep_ref(macs, params_b, acts, psi, L, lam, gain,
                                    q_energy, q_memory, scalars)
+
+
+def partition_sweep_batched(macs, params_b, acts, psi, L, lam, gain,
+                            q_energy, q_memory, scalars, *,
+                            interpret: bool = False):
+    """Batched (B, N, C) sweep: one kernel launch over every cell of a grid.
+
+    The wrapper seam for callers outside kernels/ (scenario grids pick the
+    backend explicitly, so this dispatches on ``interpret`` alone rather
+    than the module-level ``set_impl`` switch)."""
+    from .partition_sweep import partition_sweep_batched as _impl
+    return _impl(macs, params_b, acts, psi, L, lam, gain, q_energy,
+                 q_memory, scalars, interpret=interpret)

@@ -19,7 +19,6 @@ from ..configs.base import get_config, reduced
 from ..models import transformer
 from ..serving.engine import Request, ServingEngine
 from .mesh import make_host_mesh, make_production_mesh
-from . import sharding
 
 
 def main():

@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from ..configs.base import get_config, reduced
 from ..data.pipeline import for_arch
@@ -75,7 +74,8 @@ def main():
                                            stream.get_batch(step))
             slow = mon.end_step()
             if step % 10 == 0 or step == args.steps - 1:
-                print(f"step {step:5d} loss {float(metrics['loss']):.4f}"
+                # logging-cadence sync (every 10th step), not per-step
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f}"  # reprolint: ignore[host-sync]
                       f" ({time.time()-t0:.1f}s)"
                       + ("  [straggler]" if slow else ""), flush=True)
             if mgr and (step + 1) % args.ckpt_every == 0:

@@ -11,7 +11,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .common import (causal_mask, dense_init, head_rms_norm, local_mask, rope)
+from .common import dense_init, head_rms_norm, rope
 
 _NEG = -1e30
 
@@ -131,7 +131,6 @@ def init_ring_cache(cfg, batch: int, dtype) -> RingCache:
 
 
 def prefill_into_kv(cache: KVCache, k, v) -> KVCache:
-    s = k.shape[1]
     return KVCache(k=jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, 1),
                    v=jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, 1))
 

@@ -116,7 +116,6 @@ def fwd_flops(cfg: ArchConfig, batch: int, seq: int) -> float:
 
 def step_flops(cfg: ArchConfig, shape, kind: str) -> dict:
     """Returns {"executed": F, "model": MODEL_FLOPS} for the cell."""
-    n_total = param_count(cfg)
     n_active = param_count(cfg, active_only=True)
     if kind == "train":
         tokens = shape.batch * (shape.seq // 4 if cfg.enc_layers else shape.seq)

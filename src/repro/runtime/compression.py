@@ -12,8 +12,6 @@ Explicit shard_map data-parallel step with wire compression:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

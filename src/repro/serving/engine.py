@@ -132,13 +132,22 @@ class ServingEngine:
         # (batch, width, ragged?) triples traced so far == jit compilations
         self._prefill_shapes: set[tuple] = set()
         from ..launch.sharding import shard_ctx
+
+        # Greedy argmax happens INSIDE the jitted programs: only the (B,)
+        # int32 next-token ids ever cross to the host, never the (B, vocab)
+        # logits, and the argmax fuses into the decode dispatch instead of
+        # running as a separate eager op every tick (reprolint: host-sync).
+        def greedy(out):
+            logits, cache = out
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
         self._prefill = shard_ctx(mesh, jax.jit(
-            lambda batch, pad: transformer.prefill(params, cfg, batch,
-                                                   s_max=s_max, pad=pad)))
+            lambda batch, pad: greedy(transformer.prefill(
+                params, cfg, batch, s_max=s_max, pad=pad))))
         if sync_batching:
             self._decode = shard_ctx(mesh, jax.jit(
-                lambda cache, toks: transformer.decode_step(params, cfg,
-                                                            cache, toks)))
+                lambda cache, toks: greedy(transformer.decode_step(
+                    params, cfg, cache, toks))))
             return
 
         # -- continuous-batching state ------------------------------------
@@ -163,8 +172,9 @@ class ServingEngine:
             lambda state, solo, pad, slot, ids: kvpool.commit_prefill(
                 state, solo, pad, slot, ids, block_size=kv_block)))
         self._decode_paged = shard_ctx(mesh, jax.jit(
-            lambda state, toks, table, lens: transformer.decode_step_paged(
-                params, cfg, state, toks, table, lens)))
+            lambda state, toks, table, lens: greedy(
+                transformer.decode_step_paged(params, cfg, state, toks,
+                                              table, lens))))
 
     @property
     def prefill_compiles(self) -> int:
@@ -219,16 +229,18 @@ class ServingEngine:
         self._complete(req)
 
     def _solo_prefill(self, req: Request):
-        """Batch-1 bucketed prefill.  Returns (logits (V,), cache, pad)."""
+        """Batch-1 bucketed prefill.  Returns (next-token int, cache, pad)."""
         n = len(req.prompt)
         width = self._bucket_width(n, max(req.max_new, 1))
         toks = np.pad(np.asarray(req.prompt), (width - n, 0))[None]
         pad = width - n
         pad_arg = jnp.asarray([pad], jnp.int32) if pad else None
         self._prefill_shapes.add((1, width, pad_arg is not None))
-        logits, cache = self._prefill(
+        tok, cache = self._prefill(
             {"tokens": jnp.asarray(toks, jnp.int32)}, pad_arg)
-        return logits[0], cache, pad
+        # admission's one sanctioned sync: a single int32 per admitted request
+        nxt = int(np.asarray(tok)[0])    # reprolint: ignore[host-sync]
+        return nxt, cache, pad
 
     # -- continuous batching ------------------------------------------------
 
@@ -245,8 +257,8 @@ class ServingEngine:
                 continue
             if req.max_new == 1:
                 self.queue.popleft()
-                logits, _, _ = self._solo_prefill(req)
-                req.out.append(int(np.asarray(jnp.argmax(logits, -1))))
+                nxt, _, _ = self._solo_prefill(req)
+                req.out.append(nxt)
                 self._complete_at_admission(req)
                 continue
             free = [i for i, r in enumerate(self.active) if r is None]
@@ -266,15 +278,16 @@ class ServingEngine:
                 return                       # pool full: wait for completions
             self.queue.popleft()
             slot = free[0]
-            logits, cache, pad = self._solo_prefill(req)
+            nxt, cache, pad = self._solo_prefill(req)
             width = len(req.prompt) + pad
+            # ids length is the bucket width in blocks: one compile per
+            # bucket, exactly like prefill itself
             ids = np.zeros(-(-width // self.kv_block), np.int32)
             ids[:len(blocks)] = blocks       # slack blocks -> dummy block 0
             solo = {"units": cache["units"], "tail": cache["tail"]}
-            self._pool_state = self._commit(
+            self._pool_state = self._commit(   # reprolint: ignore[recompile-hazard]
                 self._pool_state, solo, jnp.int32(pad), jnp.int32(slot),
                 jnp.asarray(ids))
-            nxt = int(np.asarray(jnp.argmax(logits, -1)))
             req.out.append(nxt)
             self.active[slot] = req
             self.owned[slot] = list(blocks)
@@ -343,11 +356,12 @@ class ServingEngine:
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return bool(self.queue)
-        logits, self._pool_state = self._decode_paged(
+        toks, self._pool_state = self._decode_paged(
             self._pool_state, jnp.asarray(self.last_tokens),
             jnp.asarray(self.block_tables), jnp.asarray(self.seq_lens))
         self.decode_steps += 1
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        # the tick's one sanctioned sync: (slots,) int32 token ids
+        nxt = np.asarray(toks)           # reprolint: ignore[host-sync]
         for i in live:
             req = self.active[i]
             self.seq_lens[i] += 1
@@ -384,10 +398,11 @@ class ServingEngine:
         # carries no "pad" entry (the decode fast path).
         pad_arg = jnp.asarray(pad) if pad.any() else None
         self._prefill_shapes.add(toks.shape + (pad_arg is not None,))
-        logits, cache = self._prefill({"tokens": jnp.asarray(toks, jnp.int32)},
-                                      pad_arg)
+        tok_ids, cache = self._prefill(
+            {"tokens": jnp.asarray(toks, jnp.int32)}, pad_arg)
         self.cache = cache
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        # admission's one sanctioned sync (batch x int32)
+        nxt = np.asarray(tok_ids)        # reprolint: ignore[host-sync]
         for i, r in enumerate(batch):
             self.active[i] = r if r.rid >= 0 else None
             self.remaining[i] = r.max_new
@@ -410,10 +425,11 @@ class ServingEngine:
         if self.cache is None or all(r is None for r in self.active):
             self.cache = None
             return bool(self.queue)
-        logits, self.cache = self._decode(self.cache,
-                                          jnp.asarray(self._last, jnp.int32))
+        toks, self.cache = self._decode(self.cache,
+                                        jnp.asarray(self._last, jnp.int32))
         self.decode_steps += 1
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        # the tick's one sanctioned sync: (slots,) int32 token ids
+        nxt = np.asarray(toks)           # reprolint: ignore[host-sync]
         self._last = nxt
         alive = False
         for i, r in enumerate(self.active):

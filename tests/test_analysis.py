@@ -1,0 +1,508 @@
+"""Tests for the static-analysis subsystem (repro.analysis).
+
+Layer 1: per-rule fixture snippets -- positive, suppressed, and baseline
+paths -- through ``lint_source``/``lint_paths`` and the CLI entry point.
+Layer 2: the eval_shape contract sweep pinned over the FULL config
+registry, and the retrace probes.
+"""
+import json
+import textwrap
+
+from repro.analysis import findings as F
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.linter import apply_baseline, lint_paths, lint_source
+
+
+def lint(src, rules=None, path="fixture.py"):
+    return lint_source(textwrap.dedent(src), path, rules=rules)
+
+
+def rules_of(found):
+    return [f.rule for f in found]
+
+
+# ---------------------------------------------------------------------------
+# key-reuse
+# ---------------------------------------------------------------------------
+
+KEY_REUSE_POSITIVE = """
+    import jax
+
+    def bad():
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (4,))
+        b = jax.random.normal(key, (4,))
+        return a + b
+"""
+
+
+def test_key_reuse_positive():
+    found = lint(KEY_REUSE_POSITIVE)
+    assert rules_of(found) == ["key-reuse"]
+    assert "'key' reused" in found[0].message
+
+
+def test_key_reuse_split_is_clean():
+    found = lint("""
+        import jax
+
+        def good():
+            key = jax.random.PRNGKey(0)
+            k1, k2 = jax.random.split(key)
+            return jax.random.normal(k1, (4,)) + jax.random.normal(k2, (4,))
+    """)
+    assert found == []
+
+
+def test_key_reuse_fold_in_does_not_consume():
+    found = lint("""
+        import jax
+
+        def good(key):
+            key = jax.random.PRNGKey(0)
+            ks = [jax.random.fold_in(key, i) for i in range(3)]
+            return jax.random.normal(jax.random.fold_in(key, 9), (2,))
+    """)
+    assert found == []
+
+
+def test_key_reuse_split_array_element():
+    found = lint("""
+        import jax
+
+        def bad():
+            ks = jax.random.split(jax.random.PRNGKey(0), 4)
+            a = jax.random.normal(ks[0], (4,))
+            b = jax.random.normal(ks[1], (4,))
+            c = jax.random.normal(ks[0], (4,))
+            return a, b, c
+    """)
+    assert rules_of(found) == ["key-reuse"]
+    assert "ks[0]" in found[0].message
+
+
+def test_key_reuse_cross_iteration():
+    # consuming the same key every loop pass (no re-split) is reuse
+    found = lint("""
+        import jax
+
+        def bad(key):
+            key = jax.random.PRNGKey(0)
+            out = []
+            for i in range(3):
+                out.append(jax.random.normal(key, (2,)))
+            return out
+    """)
+    assert "key-reuse" in rules_of(found)
+
+
+def test_key_reuse_loop_resplit_is_clean():
+    found = lint("""
+        import jax
+
+        def good():
+            key = jax.random.PRNGKey(0)
+            out = []
+            for i in range(3):
+                key, k = jax.random.split(key)
+                out.append(jax.random.normal(k, (2,)))
+            return out
+    """)
+    assert found == []
+
+
+def test_key_reuse_suppressed():
+    found = lint("""
+        import jax
+
+        def warm():
+            key = jax.random.PRNGKey(0)
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))  # reprolint: ignore[key-reuse]
+            return a, b
+    """)
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# jit-branch
+# ---------------------------------------------------------------------------
+
+JIT_BRANCH_POSITIVE = """
+    import jax
+
+    @jax.jit
+    def bad(x):
+        if x > 0:
+            return x
+        return -x
+"""
+
+
+def test_jit_branch_positive():
+    found = lint(JIT_BRANCH_POSITIVE)
+    assert rules_of(found) == ["jit-branch"]
+
+
+def test_jit_branch_shape_and_none_are_static():
+    found = lint("""
+        import jax
+
+        @jax.jit
+        def good(x, mask):
+            if x.shape[0] > 4:
+                x = x[:4]
+            if mask is None:
+                return x
+            if len(x.shape) == 2:
+                return x * mask
+            return x
+    """)
+    assert found == []
+
+
+def test_jit_branch_static_argnames_excluded():
+    found = lint("""
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames="n")
+        def good(x, n):
+            if n > 4:
+                return x[:4]
+            return x
+    """)
+    assert found == []
+
+
+def test_jit_branch_wrapped_local_def():
+    found = lint("""
+        import jax
+
+        def make():
+            def step(x):
+                while x < 3:
+                    x = x + 1
+                return x
+            return jax.jit(step)
+    """)
+    assert rules_of(found) == ["jit-branch"]
+
+
+def test_jit_branch_taint_flows_through_assignment():
+    found = lint("""
+        import jax
+
+        @jax.jit
+        def bad(x):
+            y = x * 2
+            if y > 1:
+                return y
+            return -y
+    """)
+    assert rules_of(found) == ["jit-branch"]
+
+
+# ---------------------------------------------------------------------------
+# recompile-hazard
+# ---------------------------------------------------------------------------
+
+def test_recompile_inline_jit_call():
+    found = lint("""
+        import jax
+
+        def bad(x):
+            return jax.jit(lambda v: v * 2)(x)
+    """)
+    assert rules_of(found) == ["recompile-hazard"]
+    assert "inline" in found[0].message
+
+
+def test_recompile_jit_in_loop():
+    found = lint("""
+        import jax
+
+        def bad(fns, x):
+            outs = []
+            for f in fns:
+                g = jax.jit(f)
+                outs.append(g(x))
+            return outs
+    """)
+    assert "recompile-hazard" in rules_of(found)
+
+
+def test_recompile_unhashable_static_argnums():
+    found = lint("""
+        import jax
+
+        def f(x, n):
+            return x[:n]
+
+        g = jax.jit(f, static_argnums=[1])
+    """)
+    assert rules_of(found) == ["recompile-hazard"]
+    assert "unhashable" in found[0].message
+
+
+def test_recompile_shape_varying_call_site():
+    found = lint("""
+        import jax
+        import numpy as np
+
+        run = jax.jit(lambda t: t.sum())
+
+        def bad(prompt, width):
+            toks = np.pad(prompt, (width - len(prompt), 0))
+            return run(toks)
+    """)
+    assert rules_of(found) == ["recompile-hazard"]
+    assert "shape-varying" in found[0].message
+
+
+def test_recompile_bucketing_helper_exempt():
+    found = lint("""
+        import jax
+        import numpy as np
+
+        run = jax.jit(lambda t: t.sum())
+
+        def _bucket_width(n):
+            return max(8, 1 << (n - 1).bit_length())
+
+        def good(prompt):
+            width = _bucket_width(len(prompt))
+            toks = np.pad(prompt, (width - len(prompt), 0))
+            return run(toks)
+    """)
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+HOST_SYNC_POSITIVE = """
+    import jax
+    import numpy as np
+
+    step = jax.jit(lambda s: s * 2)
+
+    def serve(state, n):
+        for _ in range(n):
+            state = step(state)
+            print(float(state))
+        return state
+"""
+
+
+def test_host_sync_positive():
+    found = lint(HOST_SYNC_POSITIVE)
+    assert rules_of(found) == ["host-sync"]
+
+
+def test_host_sync_suppressed():
+    found = lint("""
+        import jax
+
+        step = jax.jit(lambda s: s * 2)
+
+        def serve(state, n):
+            for _ in range(n):
+                state = step(state)
+                print(float(state))  # reprolint: ignore[host-sync]
+            return state
+    """)
+    assert found == []
+
+
+def test_host_sync_engine_hot_zone_by_path():
+    # the configured hot zone applies by file path + function name, no
+    # loop required
+    found = lint("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        class Engine:
+            def _step_continuous(self):
+                logits = self._decode()
+                return np.asarray(jnp.argmax(logits, -1))
+    """, path="src/repro/serving/engine.py")
+    assert rules_of(found) == ["host-sync"]
+
+
+def test_host_sync_host_data_is_clean():
+    found = lint("""
+        import numpy as np
+
+        def drive(reqs, n):
+            for _ in range(n):
+                counts = np.asarray([len(r) for r in reqs])
+                print(float(counts.sum()))
+            return reqs
+    """)
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# pallas-wrapper
+# ---------------------------------------------------------------------------
+
+def test_pallas_wrapper_direct_kernel_import():
+    found = lint("""
+        from repro.kernels.flash_attention import flash_attention_pallas
+    """, path="src/repro/serving/engine.py")
+    assert rules_of(found) == ["pallas-wrapper"]
+
+
+def test_pallas_wrapper_direct_pallas_import():
+    found = lint("""
+        from jax.experimental import pallas as pl
+    """, path="src/repro/core/sweep.py")
+    assert rules_of(found) == ["pallas-wrapper"]
+
+
+def test_pallas_wrapper_ops_and_ref_allowed():
+    found = lint("""
+        from repro.kernels.ops import flash_attention
+        from repro.kernels.ref import attention_ref
+    """, path="src/repro/core/sweep.py")
+    assert found == []
+
+
+def test_pallas_wrapper_inside_kernels_allowed():
+    found = lint("""
+        from jax.experimental import pallas as pl
+        from .flash_attention import flash_attention_pallas
+    """, path="src/repro/kernels/ops.py")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# baseline workflow + fingerprints
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip(tmp_path):
+    fixture = tmp_path / "fx.py"
+    fixture.write_text(textwrap.dedent(KEY_REUSE_POSITIVE))
+    found = lint_paths(paths=[str(fixture)], root=tmp_path)
+    assert len(found) == 1
+
+    baseline = tmp_path / "baseline.json"
+    F.write_baseline(baseline, found)
+    data = json.loads(baseline.read_text())
+    assert data["version"] == 1 and len(data["findings"]) == 1
+    assert "note" in data["findings"][0]
+
+    new, old, _ = apply_baseline(found, root=tmp_path,
+                                 baseline_path=baseline)
+    assert new == [] and len(old) == 1
+
+
+def test_fingerprint_survives_line_shift(tmp_path):
+    fixture = tmp_path / "fx.py"
+    src = textwrap.dedent(KEY_REUSE_POSITIVE)
+    fixture.write_text(src)
+    (f1,) = lint_paths(paths=[str(fixture)], root=tmp_path)
+    fixture.write_text("# a new header comment\n# another\n" + src)
+    (f2,) = lint_paths(paths=[str(fixture)], root=tmp_path)
+    assert f1.line != f2.line
+    assert f1.fingerprint == f2.fingerprint
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert F.load_baseline(tmp_path / "nope.json") == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exits_nonzero_on_each_rule_fixture(tmp_path):
+    fixtures = {
+        "key-reuse": KEY_REUSE_POSITIVE,
+        "jit-branch": JIT_BRANCH_POSITIVE,
+        "host-sync": HOST_SYNC_POSITIVE,
+        "recompile-hazard": """
+            import jax
+
+            def bad(x):
+                return jax.jit(lambda v: v * 2)(x)
+        """,
+        "pallas-wrapper": """
+            from jax.experimental import pallas as pl
+        """,
+    }
+    empty = tmp_path / "empty_baseline.json"
+    empty.write_text('{"version": 1, "findings": []}\n')
+    for rule, src in fixtures.items():
+        fx = tmp_path / f"{rule.replace('-', '_')}.py"
+        fx.write_text(textwrap.dedent(src))
+        rc = cli_main(["--lint", "--paths", str(fx),
+                       "--baseline", str(empty)])
+        assert rc == 1, f"{rule} fixture must gate"
+
+
+def test_cli_baseline_silences(tmp_path):
+    fx = tmp_path / "fx.py"
+    fx.write_text(textwrap.dedent(KEY_REUSE_POSITIVE))
+    baseline = tmp_path / "baseline.json"
+    rc = cli_main(["--write-baseline", "--paths", str(fx),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+    rc = cli_main(["--lint", "--paths", str(fx),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+
+
+def test_cli_list_rules_and_unknown_rule():
+    assert cli_main(["--list-rules"]) == 0
+    assert cli_main(["--lint", "--rules", "no-such-rule"]) == 2
+
+
+def test_repo_is_lint_clean():
+    """The shipped tree carries no unsuppressed, unbaselined findings --
+    the same bar `python -m repro.analysis --check` gates in CI."""
+    found = lint_paths()
+    new, _, _ = apply_baseline(found)
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: contract sweep + retrace probes
+# ---------------------------------------------------------------------------
+
+def test_contract_sweep_full_registry():
+    from repro.analysis.contracts import run_contracts
+    from repro.configs import base as config_base
+
+    report = run_contracts()
+    assert report.ok, "\n".join(f.render() for f in report.failures)
+
+    archs = set(config_base.load_all())
+    covered = set(report.covered)
+    skipped_paged = {a for a, p, _ in report.skipped if p == "paged"}
+    for arch in archs:
+        for path in ("prefill", "decode", "ragged", "pspec"):
+            assert (arch, path) in covered, f"missing {arch} x {path}"
+        if arch not in skipped_paged:
+            assert (arch, "paged") in covered, f"missing {arch} x paged"
+    # skips are contract-driven, not silent: only non-plain-decoder stacks
+    for arch in skipped_paged:
+        cfg = config_base.get_config(arch)
+        assert cfg.enc_layers or set("xde") & set(cfg.block_pattern)
+    assert report.elapsed_s < 60, "contract sweep must stay CI-cheap"
+
+
+def test_retrace_serving_steady_state():
+    from repro.analysis.retrace import serving_retraces
+
+    fails = serving_retraces()
+    assert fails == [], "\n".join(f.render() for f in fails)
+
+
+def test_retrace_grid_rollout():
+    from repro.analysis.retrace import rollout_retraces
+
+    fails = rollout_retraces()
+    assert fails == [], "\n".join(f.render() for f in fails)

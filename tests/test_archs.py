@@ -1,8 +1,6 @@
 """Per-architecture smoke tests (deliverable f): reduced same-family configs,
 one forward/train step on CPU, shape + finiteness asserts, and the serving
 invariant decode(cache) == teacher-forced logits."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

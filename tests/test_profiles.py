@@ -5,7 +5,7 @@ import pytest
 from repro.configs.base import load_all
 from repro.profiling.convnets import alexnet_profile, resnet18_profile
 from repro.profiling.lmprofiles import lm_profile
-from repro.profiling.profiles import LayerProfile, ProfileBatch
+from repro.profiling.profiles import ProfileBatch
 
 
 def test_alexnet_totals_match_literature():
@@ -48,8 +48,11 @@ def test_lm_profiles_valid(name):
     assert p.num_layers == want - 1  # input is the pseudo-layer 0
     assert np.all(p.macs >= 0) and np.all(p.param_bytes >= 0)
     assert np.all(np.isfinite(p.act_bytes))
-    # total params (bytes/2 = count) within 35% of the config's scale class
+    # total params (bytes/2 = count) must reconcile with the roofline
+    # parameter count -- the profile is a per-layer decomposition of it
+    from repro.profiling.roofline import param_count
     total_params = p.param_bytes.sum() / 2
+    assert total_params == pytest.approx(param_count(cfg), rel=1e-3)
 
 
 def test_moe_profile_memory_dominated():

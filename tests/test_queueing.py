@@ -1,6 +1,5 @@
 """Queueing-model correctness: analytical eq. (2) vs discrete-event simulation."""
 import numpy as np
-import jax.numpy as jnp
 import pytest
 from _hypothesis_compat import given, settings, st
 

@@ -5,8 +5,6 @@ The batched/sharded parity tests mirror tests/test_gridshard.py: trace-driven
 grids must match the per-cell loop to 1e-5, including an uneven
 B-not-multiple-of-devices sharded case.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
