@@ -1,15 +1,25 @@
 """Benchmark harness entry point (deliverable d): one experiment per paper
-figure + kernel micro-benchmarks + the serving-engine A/B + the roofline
-table.
+figure + kernel micro-benchmarks + the serving-engine A/B + the batched
+scenario-grid A/B + the roofline table.
 
 Prints ``name,us_per_call,derived`` CSV per experiment, as required, and
 writes the canonical ``BENCH_N.json`` perf-trajectory artifact at the repo
-root (currently ``BENCH_6.json``: continuous-vs-sync serving latency --
-p50/p99 replay latency, goodput, slot-steps/sec, prefill-compile counts
-from BOTH engine modes; see benchmarks/serving_latency.py).
+root (currently ``BENCH_8.json``), which folds together:
+
+* ``serving``       -- continuous-vs-sync replay latency, goodput,
+                       slot-steps/sec, prefill-compile counts
+                       (benchmarks/serving_latency.py, the old BENCH_6 body)
+* ``scenario_grid`` -- batched-vs-loop grid rollout throughput + speedup
+                       (benchmarks/scenario_grid.bench_payload)
+* ``kernels``       -- the kernel micro-benchmark rows
+                       (benchmarks/kernels_micro.bench_all)
+
+``--json-only`` skips the slow paper-figure / ablation / roofline legs and
+just measures + writes the JSON artifact (the CI bench leg uses this).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -19,9 +29,59 @@ def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
 
 
-def main() -> None:
+def build_bench_payload(*, grid_cells: int = 8, grid_ues: int = 4,
+                        grid_steps: int = 24, grid_repeats: int = 2) -> dict:
+    """Measure the three tracked subsystems and assemble the BENCH_8 body."""
+    from . import kernels_micro, scenario_grid, serving_latency
+    serving = serving_latency.bench_all()
+    kernels = [{"name": name, "us_per_call": round(us, 1), "derived": derived}
+               for name, us, derived in kernels_micro.bench_all()]
+    grid = scenario_grid.bench_payload(cells=grid_cells, ues=grid_ues,
+                                       steps=grid_steps,
+                                       repeats=grid_repeats)
+    return {"bench": 8, "serving": serving, "scenario_grid": grid,
+            "kernels": kernels}
+
+
+def _emit_bench_rows(payload: dict) -> None:
+    """Print the payload's measurements in the harness CSV convention."""
+    from . import serving_latency
+    for k in payload["kernels"]:
+        _row(f"kernel[{k['name']}]", k["us_per_call"], k["derived"])
+    for name, us, derived in serving_latency.rows(payload["serving"]):
+        _row(name, us, derived)
+    g = payload["scenario_grid"]
+    shape = f"{g['config']['cells']}x{g['config']['ues']}"
+    _row(f"scenario_grid[{shape}]", g["batched"]["best_seconds"] * 1e6,
+         f"batched_slots_per_s={g['batched']['slots_per_s']:.0f}"
+         f";loop_slots_per_s={g['loop']['slots_per_s']:.0f}"
+         f";speedup={g['batched_speedup']:.2f}x")
+
+
+def _write_bench_json(payload: dict) -> None:
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_8.json")
+    with open(bench_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    _row("bench_json", 0.0, f"wrote={os.path.normpath(bench_path)}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json-only", action="store_true",
+                    help="measure and write BENCH_8.json only (skips the "
+                         "paper-figure, ablation, and roofline legs)")
+    args = ap.parse_args(argv)
+
     t_start = time.time()
     print("name,us_per_call,derived")
+
+    if args.json_only:
+        payload = build_bench_payload()
+        _emit_bench_rows(payload)
+        _write_bench_json(payload)
+        _row("bench_total", (time.time() - t_start) * 1e6,
+             "seconds=%.1f" % (time.time() - t_start))
+        return 0
 
     # -- paper figures -------------------------------------------------------
     from . import paper_figs
@@ -58,20 +118,10 @@ def main() -> None:
         _row(f"ablation_v[V={r['V']:g}]", (time.time() - t0) * 1e6 / 3,
              f"delay={r['delay_s']:.4f}s;qE={r['q_energy_final']:.1f}")
 
-    # -- kernels ---------------------------------------------------------------
-    from . import kernels_micro
-    for name, us, derived in kernels_micro.bench_all():
-        _row(f"kernel[{name}]", us, derived)
-
-    # -- serving engine A/B (continuous vs sync) + BENCH_6.json ----------------
-    from . import serving_latency
-    payload = serving_latency.bench_all()
-    for name, us, derived in serving_latency.rows(payload):
-        _row(name, us, derived)
-    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_6.json")
-    with open(bench_path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-    _row("bench_json", 0.0, f"wrote={os.path.normpath(bench_path)}")
+    # -- kernels + serving A/B + scenario grid -> BENCH_8.json -----------------
+    payload = build_bench_payload()
+    _emit_bench_rows(payload)
+    _write_bench_json(payload)
 
     # -- roofline (from dry-run artifacts; skip silently if sweep not run) -----
     from . import roofline
@@ -93,7 +143,8 @@ def main() -> None:
 
     _row("bench_total", (time.time() - t_start) * 1e6,
          "seconds=%.1f" % (time.time() - t_start))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

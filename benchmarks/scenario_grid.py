@@ -91,6 +91,25 @@ def bench_loop(grid, policy: str, steps: int, repeats: int):
     return best, grid.b * steps / best
 
 
+def bench_payload(*, cells: int = 8, ues: int = 4, steps: int = 24,
+                  repeats: int = 2, policy: str = "oracle",
+                  seed: int = 0) -> dict:
+    """Small-grid batched-vs-loop measurement as a JSON-ready block for the
+    ``BENCH_N.json`` perf-trajectory artifact (benchmarks/run.py).  Defaults
+    are far below the CLI's gate-grade 64x8 run on purpose: the artifact
+    tracks the speedup trend per PR, the CLI ``--gate`` proves it."""
+    grid = build_grid(cells, ues, seed)
+    sec_b, sps_b = bench_batched(grid, policy, steps, repeats)
+    sec_l, sps_l = bench_loop(grid, policy, steps, repeats)
+    return {
+        "config": {"cells": cells, "ues": ues, "steps": steps,
+                   "repeats": repeats, "policy": policy, "seed": seed},
+        "batched": {"best_seconds": sec_b, "slots_per_s": round(sps_b, 1)},
+        "loop": {"best_seconds": sec_l, "slots_per_s": round(sps_l, 1)},
+        "batched_speedup": round(sps_b / sps_l, 3),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cells", type=int, default=64)

@@ -618,11 +618,17 @@ class RecompileHazardRule:
 # ---------------------------------------------------------------------------
 
 # (path-suffix, function names): the serving tick/admission hot path, where
-# one stray device->host round trip serializes every slot's decode step
+# one stray device->host round trip serializes every slot's decode step.
+# The telemetry read sites (repro/obs) are held to the same bar: they run
+# inside sampled ticks of the same loop, and their contract is to read
+# only host state the engine already materialized -- a device sync hiding
+# in a "metrics read" would stall the pipeline exactly like one in the
+# step function itself.
 HOT_ZONES = (
     ("serving/engine.py", ("_step_continuous", "_step_sync",
                            "_admit_continuous", "_admit_sync",
                            "_solo_prefill", "_grow_blocks", "step")),
+    ("obs/enginehooks.py", ("on_prefill", "on_decode_tick", "sample")),
 )
 
 _SYNC_WRAPPERS = ("float", "int", "bool", "numpy.asarray", "numpy.array",

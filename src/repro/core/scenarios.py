@@ -593,17 +593,21 @@ class ScenarioGrid:
             states = self.reset(k0)
 
             def body(carry, _):
-                sts, k = carry
-                k, k_act = jax.random.split(k)
-                if act is None:
-                    cuts = self.oracle_cuts(sts, backend=oracle_backend)
-                else:
-                    cuts = jax.vmap(act)(params, sts,
-                                         gridshard.cell_keys(k_act, b, b_run))
-                sts2, res = jax.vmap(step_p)(params, sts, cuts)
-                if gs is not None:
-                    sts2 = gridshard.constrain(sts2, gs)
-                return (sts2, k), res
+                # named so profiler dumps attribute per-slot cost to the
+                # grid scan (pairs with the host "grid_rollout" span)
+                with jax.named_scope("repro.grid_scan_step"):
+                    sts, k = carry
+                    k, k_act = jax.random.split(k)
+                    if act is None:
+                        cuts = self.oracle_cuts(sts, backend=oracle_backend)
+                    else:
+                        cuts = jax.vmap(act)(
+                            params, sts,
+                            gridshard.cell_keys(k_act, b, b_run))
+                    sts2, res = jax.vmap(step_p)(params, sts, cuts)
+                    if gs is not None:
+                        sts2 = gridshard.constrain(sts2, gs)
+                    return (sts2, k), res
 
             (states, _), results = jax.lax.scan(
                 body, (states, key), None, length=steps)
@@ -631,10 +635,33 @@ class ScenarioGrid:
         return jax.jit(rollout)
 
     def rollout(self, policy: str | Callable = "oracle", steps: int = 200,
-                seed: int = 0, oracle_backend: str = "auto"):
-        """Convenience one-shot: build + run the jitted rollout."""
+                seed: int = 0, oracle_backend: str = "auto",
+                telemetry=None):
+        """Convenience one-shot: build + run the jitted rollout.
+
+        ``telemetry=`` (a :class:`repro.obs.Telemetry`) wraps the run in a
+        ``grid_rollout`` span and records throughput gauges --
+        ``grid_slots_per_s`` (one slot = one (cell, time-slot) advance of
+        all N UEs, the benchmarks/scenario_grid.py unit) and
+        ``grid_cells_per_s`` -- from one host-side ``block_until_ready``
+        timing around the whole program (no extra syncs inside the scan).
+        """
         fn = self.make_rollout(policy, steps, oracle_backend=oracle_backend)
-        return fn(jax.random.PRNGKey(seed))
+        if telemetry is None:
+            return fn(jax.random.PRNGKey(seed))
+        import time
+        m = telemetry.metrics
+        with telemetry.tracer.span("grid_rollout", device=True,
+                                   cells=self.b, steps=steps):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(jax.random.PRNGKey(seed)))
+            dt = time.perf_counter() - t0
+        m.counter("grid_rollouts_total", "jitted grid rollouts run").inc()
+        m.gauge("grid_slots_per_s", "cell x time-slot advances per second "
+                "(all N UEs), last rollout").set(self.b * steps / dt)
+        m.gauge("grid_cells_per_s", "whole-episode cell throughput, last "
+                "rollout").set(self.b / dt)
+        return out
 
 
 def grid_from_names(specs: Sequence[str | tuple[str, dict]]) -> ScenarioGrid:

@@ -303,26 +303,30 @@ def prefill(params, cfg, batch, s_max: int, pad=None):
     (``caches["pad"]``) so ``decode_step`` keeps masking those slots;
     padless calls leave the cache structure unchanged.
     """
-    tokens = batch["tokens"]
-    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
-    ctx = _context(params, cfg, batch)
-    s = tokens.shape[1]
-    if pad is None:
-        positions = jnp.arange(s)
-        pad_mask = None
-    else:
-        pad = jnp.asarray(pad, jnp.int32)
-        # row i's first real token sits at index pad[i] -> position 0
-        positions = jnp.maximum(jnp.arange(s)[None, :] - pad[:, None], 0)
-        pad_mask = jnp.arange(s)[None, :] >= pad[:, None]      # (B, S) valid
-    x, _, caches = _run_stack(params, cfg, cfg.block_pattern, x, positions,
-                              ctx, want_cache=True, s_max=s_max, remat=False,
-                              pad_mask=pad_mask)
-    caches["pos"] = jnp.int32(s)
-    if pad is not None:
-        caches["pad"] = pad
-    logits = _logits(params, cfg, x[:, -1:])[:, 0]
-    return logits, caches
+    # named for profiler dumps (pairs with the host "prefill" span the
+    # serving telemetry records; see docs/observability.md)
+    with jax.named_scope("repro.prefill"):
+        tokens = batch["tokens"]
+        x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+        ctx = _context(params, cfg, batch)
+        s = tokens.shape[1]
+        if pad is None:
+            positions = jnp.arange(s)
+            pad_mask = None
+        else:
+            pad = jnp.asarray(pad, jnp.int32)
+            # row i's first real token sits at index pad[i] -> position 0
+            positions = jnp.maximum(jnp.arange(s)[None, :] - pad[:, None], 0)
+            pad_mask = jnp.arange(s)[None, :] >= pad[:, None]  # (B, S) valid
+        x, _, caches = _run_stack(params, cfg, cfg.block_pattern, x,
+                                  positions, ctx, want_cache=True,
+                                  s_max=s_max, remat=False,
+                                  pad_mask=pad_mask)
+        caches["pos"] = jnp.int32(s)
+        if pad is not None:
+            caches["pad"] = pad
+        logits = _logits(params, cfg, x[:, -1:])[:, 0]
+        return logits, caches
 
 
 # -- decode -------------------------------------------------------------------
@@ -432,29 +436,34 @@ def decode_step_paged(params, cfg, caches, tokens, block_table, seq_lens):
     ``seq_lens`` (B,) int32 carry each slot's blocks and cache length --
     there is no shared ``pos`` frontier and no pad vector.  Returns
     (logits (B, V), caches).  Cross-attention kinds are not servable here
-    (see ``kvpool._check_pattern``)."""
-    seq_lens = jnp.asarray(seq_lens, jnp.int32)
-    x = params["embed"][tokens][:, None, :].astype(dtype_of(cfg.compute_dtype))
+    (see ``kvpool._check_pattern``).
 
-    def scan_body(x, inp):
-        unit_p, unit_c = inp
-        new_c = {}
-        for i, kind in enumerate(cfg.block_pattern):
-            x, c = _layer_decode_paged(unit_p[f"slot{i}"], cfg, kind, x,
-                                       unit_c[f"slot{i}"], block_table,
+    Named ``repro.decode_paged`` for profiler dumps (pairs with the host
+    "decode_tick" span the serving telemetry records)."""
+    with jax.named_scope("repro.decode_paged"):
+        seq_lens = jnp.asarray(seq_lens, jnp.int32)
+        x = params["embed"][tokens][:, None, :].astype(
+            dtype_of(cfg.compute_dtype))
+
+        def scan_body(x, inp):
+            unit_p, unit_c = inp
+            new_c = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, c = _layer_decode_paged(unit_p[f"slot{i}"], cfg, kind, x,
+                                           unit_c[f"slot{i}"], block_table,
+                                           seq_lens)
+                new_c[f"slot{i}"] = c
+            return x, new_c
+
+        x, new_unit_caches = jax.lax.scan(
+            scan_body, x, (params["units"], caches["units"]))
+
+        new_tail = []
+        for tp, kind, tc in zip(params.get("tail", []), cfg.tail_pattern,
+                                caches["tail"]):
+            x, c = _layer_decode_paged(tp, cfg, kind, x, tc, block_table,
                                        seq_lens)
-            new_c[f"slot{i}"] = c
-        return x, new_c
+            new_tail.append(c)
 
-    x, new_unit_caches = jax.lax.scan(
-        scan_body, x, (params["units"], caches["units"]))
-
-    new_tail = []
-    for tp, kind, tc in zip(params.get("tail", []), cfg.tail_pattern,
-                            caches["tail"]):
-        x, c = _layer_decode_paged(tp, cfg, kind, x, tc, block_table,
-                                   seq_lens)
-        new_tail.append(c)
-
-    logits = _logits(params, cfg, x)[:, 0]
-    return logits, {"units": new_unit_caches, "tail": new_tail}
+        logits = _logits(params, cfg, x)[:, 0]
+        return logits, {"units": new_unit_caches, "tail": new_tail}

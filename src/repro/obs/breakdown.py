@@ -1,0 +1,117 @@
+"""Per-request E2E delay breakdown: serving ticks -> the paper's serial
+queueing stages.
+
+The paper evaluates end-to-end delay as a serial queue (UE compute ->
+uplink -> ES queue -> ES compute).  The serving engine measures the same
+request journey in *ticks* (one ``ServingEngine.step()`` == one tick), and
+this module partitions each completed request's E2E tick count into stages
+that sum EXACTLY -- no tick is lost or double-counted, pinned by
+tests/test_obs.py on both engine modes including preemption:
+
+========== ==================================== ==========================
+stage      serving definition (ticks)           paper-stage analog
+========== ==================================== ==========================
+queue_wait ticks spent queued, excluding each   ES queue wait (the arrival
+           admission tick; re-queues after      backlog A_i(t) draining)
+           preemption count here too
+prefill    one tick per admission (the prompt   UE-side compute + uplink
+           is prefilled and its first token     (the request's input
+           sampled at the admit tick); >1 only  reaching ES service)
+           after preemption = recompute
+decode     complete - last admit: decode        ES compute (ES-side
+           dispatches the request rode          inference service)
+preempted  ticks decoded then discarded by a    recompute overhead -- the
+           preemption (output cleared, KV       price of contention; no
+           freed, re-queued)                    paper analog (the paper's
+                                                queues never evict)
+========== ==================================== ==========================
+
+Identity (per request): ``queue_wait + prefill + decode + preempted ==
+complete - submit``.  Derivation: with enqueue times ``q_0 = submit, q_i =
+preempt_{i-1}`` and admissions ``a_0..a_k``, the stage sums telescope --
+``sum(a_i - q_i - 1) + (k+1) + sum(p_i - a_i) + (complete - a_k)`` collapses
+to ``complete - submit``.
+
+The raw events come from :class:`repro.traffic.recorder.TrafficRecorder`
+(which grew ``record_preempt`` alongside submit/admit/complete); use
+``TrafficRecorder.delay_breakdowns()`` for the recorder-facing entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayBreakdown:
+    """One completed request's E2E ticks split into paper stages."""
+
+    rid: int
+    queue_wait: int     # queued ticks (initial + every post-preempt requeue)
+    prefill: int        # admission ticks: 1 + one recompute per preemption
+    decode: int         # decode ticks after the final admission
+    preempted: int      # decoded-then-discarded ticks
+    n_admits: int
+    n_preempts: int
+
+    @property
+    def e2e(self) -> int:
+        """Stage sum == ``complete - submit`` exactly (see module doc)."""
+        return self.queue_wait + self.prefill + self.decode + self.preempted
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["e2e"] = self.e2e
+        return d
+
+
+def from_events(rid: int, submit, admits, preempts,
+                complete) -> DelayBreakdown | None:
+    """Build a breakdown from raw lifecycle ticks; None while the request
+    is still in flight (no submit/admit/complete yet)."""
+    admits, preempts = list(admits), list(preempts)
+    if submit is None or complete is None or not admits:
+        return None
+    if len(admits) != len(preempts) + 1:
+        raise ValueError(
+            f"request {rid}: {len(admits)} admissions vs {len(preempts)} "
+            f"preemptions -- a completed request must have exactly one more "
+            f"admit than preempt")
+    enqueues = [submit] + preempts
+    queue_wait = sum(a - q - 1 for a, q in zip(admits, enqueues))
+    preempted = sum(p - a for p, a in zip(preempts, admits))
+    if queue_wait < 0 or preempted < 0 or complete < admits[-1]:
+        raise ValueError(f"request {rid}: non-causal event order "
+                         f"(submit={submit}, admits={admits}, "
+                         f"preempts={preempts}, complete={complete})")
+    return DelayBreakdown(rid=rid, queue_wait=queue_wait,
+                          prefill=len(admits),
+                          decode=complete - admits[-1],
+                          preempted=preempted,
+                          n_admits=len(admits), n_preempts=len(preempts))
+
+
+STAGES = ("queue_wait", "prefill", "decode", "preempted", "e2e")
+
+
+def stage_summary(breakdowns: Mapping[int, DelayBreakdown]
+                  | Iterable[DelayBreakdown]) -> dict[str, dict]:
+    """Per-stage {n, mean, p50, p90, p99, max} over completed requests
+    (ticks) -- the ``python -m repro.obs`` summary table's data."""
+    import numpy as np
+    if isinstance(breakdowns, Mapping):
+        breakdowns = breakdowns.values()
+    bds = list(breakdowns)
+    out: dict[str, dict] = {}
+    for stage in STAGES:
+        vals = np.asarray([getattr(b, stage) for b in bds], np.int64)
+        if not len(vals):
+            out[stage] = {"n": 0}
+            continue
+        out[stage] = {"n": int(len(vals)),
+                      "mean": float(np.mean(vals)),
+                      "p50": float(np.percentile(vals, 50)),
+                      "p90": float(np.percentile(vals, 90)),
+                      "p99": float(np.percentile(vals, 99)),
+                      "max": int(np.max(vals))}
+    return out

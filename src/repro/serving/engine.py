@@ -46,6 +46,13 @@ comes straight from the prefill logits, zero means none) completes AT its
 admission tick in both modes -- it neither occupies a slot nor triggers a
 decode dispatch.
 
+A telemetry object (``telemetry=``, see :class:`repro.obs.Telemetry`) adds
+metrics + spans at every lifecycle edge (submit/admit/prefill/decode-tick/
+block-grow/preempt/complete) plus per-tick queue/KV-pool gauges.  Disabled
+(the default) it costs one ``self.obs is None`` check per site; enabled it
+reads only host state the engine already materialized -- never an extra
+device->host sync (docs/observability.md).
+
 See docs/serving.md for the full contract.
 """
 from __future__ import annotations
@@ -105,7 +112,7 @@ class ServingEngine:
     def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 128,
                  prefill_buckets=None, recorder=None, mesh=None,
                  sync_batching: bool = False, kv_block: int = 16,
-                 kv_blocks: int | None = None):
+                 kv_blocks: int | None = None, telemetry=None):
         self.mesh = mesh
         if mesh is not None:
             from ..launch.sharding import place_params
@@ -131,6 +138,13 @@ class ServingEngine:
         self.cache = None                    # sync mode's shared cache
         # (batch, width, ragged?) triples traced so far == jit compilations
         self._prefill_shapes: set[tuple] = set()
+        # telemetry (repro.obs.Telemetry): every instrumentation site below
+        # is one `self.obs is not None` check when disabled, and reads only
+        # already-materialized host state when enabled (docs/observability.md)
+        self.obs = None
+        if telemetry is not None:
+            from ..obs.enginehooks import EngineHooks
+            self.obs = EngineHooks(telemetry, self)
         from ..launch.sharding import shard_ctx
 
         # Greedy argmax happens INSIDE the jitted programs: only the (B,)
@@ -190,6 +204,8 @@ class ServingEngine:
         self.queue.append(req)
         if self.recorder is not None:
             self.recorder.record_submit(req.rid, self.clock, ue=req.ue)
+        if self.obs is not None:
+            self.obs.on_submit(req, self.clock)
 
     def _bucket_width(self, width: int, max_new: int) -> int:
         """Smallest bucket >= width that still leaves ``max_new`` KV slots.
@@ -219,6 +235,8 @@ class ServingEngine:
         self._completed.append(req)
         if self.recorder is not None:
             self.recorder.record_complete(req.rid, self.clock)
+        if self.obs is not None:
+            self.obs.on_complete(req, self.clock)
 
     def _complete_at_admission(self, req: Request):
         """Budget exhausted at admit time (max_new <= 1): the single token
@@ -226,6 +244,8 @@ class ServingEngine:
         its admission tick -- no slot, no decode dispatch."""
         if self.recorder is not None:
             self.recorder.record_admit(req.rid, self.clock)
+        if self.obs is not None:
+            self.obs.on_admit(req, self.clock)
         self._complete(req)
 
     def _solo_prefill(self, req: Request):
@@ -236,10 +256,13 @@ class ServingEngine:
         pad = width - n
         pad_arg = jnp.asarray([pad], jnp.int32) if pad else None
         self._prefill_shapes.add((1, width, pad_arg is not None))
+        t0 = self.obs.now() if self.obs is not None else 0.0
         tok, cache = self._prefill(
             {"tokens": jnp.asarray(toks, jnp.int32)}, pad_arg)
         # admission's one sanctioned sync: a single int32 per admitted request
         nxt = int(np.asarray(tok)[0])    # reprolint: ignore[host-sync]
+        if self.obs is not None:         # host state only: span + compile gauge
+            self.obs.on_prefill(self, t0, batch=1, width=width)
         return nxt, cache, pad
 
     # -- continuous batching ------------------------------------------------
@@ -300,6 +323,8 @@ class ServingEngine:
             self._admit_counter += 1
             if self.recorder is not None:
                 self.recorder.record_admit(req.rid, self.clock)
+            if self.obs is not None:
+                self.obs.on_admit(req, self.clock)
 
     def _release_slot(self, slot: int):
         self.allocator.free(self.owned[slot])
@@ -321,6 +346,13 @@ class ServingEngine:
         self._release_slot(slot)
         self.queue.appendleft(req)
         self.preemptions += 1
+        # duck-typed like the other record_* hooks; older recorders without
+        # the method (or recorder=None) are skipped
+        rec_preempt = getattr(self.recorder, "record_preempt", None)
+        if rec_preempt is not None:
+            rec_preempt(req.rid, self.clock)
+        if self.obs is not None:
+            self.obs.on_preempt(req, self.clock)
 
     def _grow_blocks(self):
         """Before a decode tick, make sure every active slot owns the block
@@ -342,6 +374,8 @@ class ServingEngine:
                 if got is not None:
                     self.owned[slot].append(got[0])
                     self.block_tables[slot, bidx] = got[0]
+                    if self.obs is not None:
+                        self.obs.on_block_grow()
                     break
                 victim = max(
                     (j for j, r in enumerate(self.active) if r is not None),
@@ -354,14 +388,26 @@ class ServingEngine:
         self._admit_continuous()
         self._grow_blocks()
         live = [i for i, r in enumerate(self.active) if r is not None]
+        # per-tick telemetry is SAMPLED by clock stride: even an
+        # early-returning method call costs us-scale on the cold post-
+        # dispatch path, so the stride check is inline int arithmetic and
+        # non-sampled ticks skip the calls entirely (sample_every=1 for
+        # exact per-tick reads)
+        obs = self.obs
+        sampled = obs is not None and self.clock % obs.sample_every == 0
+        if sampled:                      # host-state gauges (queue, KV pool)
+            obs.sample(self)
         if not live:
             return bool(self.queue)
+        t0 = obs.now() if sampled else 0.0
         toks, self._pool_state = self._decode_paged(
             self._pool_state, jnp.asarray(self.last_tokens),
             jnp.asarray(self.block_tables), jnp.asarray(self.seq_lens))
         self.decode_steps += 1
         # the tick's one sanctioned sync: (slots,) int32 token ids
         nxt = np.asarray(toks)           # reprolint: ignore[host-sync]
+        if sampled:
+            obs.on_decode_tick(self, t0, len(live))
         for i in live:
             req = self.active[i]
             self.seq_lens[i] += 1
@@ -398,11 +444,14 @@ class ServingEngine:
         # carries no "pad" entry (the decode fast path).
         pad_arg = jnp.asarray(pad) if pad.any() else None
         self._prefill_shapes.add(toks.shape + (pad_arg is not None,))
+        t0 = self.obs.now() if self.obs is not None else 0.0
         tok_ids, cache = self._prefill(
             {"tokens": jnp.asarray(toks, jnp.int32)}, pad_arg)
         self.cache = cache
         # admission's one sanctioned sync (batch x int32)
         nxt = np.asarray(tok_ids)        # reprolint: ignore[host-sync]
+        if self.obs is not None:
+            self.obs.on_prefill(self, t0, batch=len(batch), width=width)
         for i, r in enumerate(batch):
             self.active[i] = r if r.rid >= 0 else None
             self.remaining[i] = r.max_new
@@ -410,6 +459,8 @@ class ServingEngine:
                 continue
             if self.recorder is not None:
                 self.recorder.record_admit(r.rid, self.clock)
+            if self.obs is not None:
+                self.obs.on_admit(r, self.clock)
             if r.max_new > 0:
                 r.out.append(int(nxt[i]))
                 self.remaining[i] -= 1
@@ -422,14 +473,23 @@ class ServingEngine:
 
     def _step_sync(self) -> bool:
         self._admit_sync()
+        # sampled per-tick telemetry; see _step_continuous
+        obs = self.obs
+        sampled = obs is not None and self.clock % obs.sample_every == 0
+        if sampled:                      # host-state gauges (queue, slots)
+            obs.sample(self)
         if self.cache is None or all(r is None for r in self.active):
             self.cache = None
             return bool(self.queue)
+        live = sum(1 for r in self.active if r is not None)
+        t0 = obs.now() if sampled else 0.0
         toks, self.cache = self._decode(self.cache,
                                         jnp.asarray(self._last, jnp.int32))
         self.decode_steps += 1
         # the tick's one sanctioned sync: (slots,) int32 token ids
         nxt = np.asarray(toks)           # reprolint: ignore[host-sync]
+        if sampled:
+            obs.on_decode_tick(self, t0, live)
         self._last = nxt
         alive = False
         for i, r in enumerate(self.active):

@@ -97,6 +97,30 @@ def blocks_for(tokens: int, block_size: int) -> int:
     return max(1, -(-tokens // block_size))
 
 
+def pool_stats(allocator: BlockAllocator, seq_lens, owned) -> dict:
+    """Host-side pool gauges for telemetry (``repro.obs``): free blocks,
+    utilization (allocated / capacity), and internal fragmentation (wasted
+    token slots inside allocated blocks / allocated token capacity).
+
+    Pure host arithmetic over state the engine already holds -- the
+    allocator free list, the per-slot ``owned`` block lists, and the numpy
+    ``seq_lens`` row -- so sampling it each tick never touches the device.
+    """
+    cap = allocator.capacity
+    allocated = sum(len(blocks) for blocks in owned)
+    used_tokens = sum(int(seq_lens[i]) for i in range(len(owned))
+                      if owned[i])
+    alloc_tokens = allocated * allocator.block_size
+    return {
+        "n_free": allocator.n_free,
+        "capacity": cap,
+        "allocated": allocated,
+        "utilization": allocated / cap if cap else 0.0,
+        "fragmentation": (1.0 - used_tokens / alloc_tokens
+                          if alloc_tokens else 0.0),
+    }
+
+
 def _check_pattern(cfg) -> None:
     bad = set("xde") & (set(cfg.block_pattern) | set(cfg.tail_pattern or ()))
     if bad or cfg.enc_layers:
@@ -177,6 +201,9 @@ def commit_prefill(state, solo, pad, slot, block_ids, *, block_size: int):
     absorb the rolled pad garbage.  jit-compatible: ``pad``/``slot`` are
     traced scalars (no recompile per request), only the prefill width
     changes the signature (one compile per bucket, like prefill itself).
+
+    The whole insert runs under ``jax.named_scope("repro.commit_prefill")``
+    so profiler dumps attribute the scatter cost to admission, not decode.
     """
     nb = block_ids.shape[0]
 
@@ -227,8 +254,9 @@ def commit_prefill(state, solo, pad, slot, block_ids, *, block_size: int):
             return type(cont)(*[row(c, o) for c, o in zip(cont, one)])
         raise ValueError(f"unsupported cache node {type(cont)} at {path}")
 
-    return jax.tree_util.tree_map_with_path(insert, state, solo,
-                                            is_leaf=_cache_leaf)
+    with jax.named_scope("repro.commit_prefill"):
+        return jax.tree_util.tree_map_with_path(insert, state, solo,
+                                                is_leaf=_cache_leaf)
 
 
 def place_decode_state(mesh, state):

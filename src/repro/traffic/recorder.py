@@ -6,15 +6,24 @@ loop.  Attach one to a :class:`~repro.serving.engine.ServingEngine`
 its own step clock (one ``step()`` == one tick):
 
 * ``record_submit(rid, t, ue)``   -- request entered the queue;
-* ``record_admit(rid, t)``        -- request prefilled into a decode slot;
+* ``record_admit(rid, t)``        -- request prefilled into a decode slot
+  (called again on every re-admission after a preemption);
+* ``record_preempt(rid, t)``      -- request evicted back to the queue
+  head, output discarded (continuous mode only);
 * ``record_complete(rid, t)``     -- request finished decoding.
 
 ``to_trace`` then bins one of those event streams into the canonical
 slot-indexed ``(T, N)`` rate tensor (:class:`repro.traffic.trace.Trace`),
 which replays into the MEC environment as a
 :class:`~repro.traffic.processes.TraceArrivals` process.  The recorder is
-duck-typed -- the engine never imports this module -- so any object with the
-three ``record_*`` methods can stand in.
+duck-typed -- the engine never imports this module -- so any object with
+the ``record_*`` methods can stand in (``record_preempt`` is optional: the
+engine probes for it with ``getattr``).
+
+``delay_breakdowns`` maps the recorded ticks onto the paper's serial-queue
+stages (queue wait / prefill / decode / preemption-recompute) via
+:mod:`repro.obs.breakdown`; per-request stage sums equal E2E latency
+exactly (pinned by tests/test_obs.py).
 """
 from __future__ import annotations
 
@@ -31,26 +40,41 @@ class RequestEvents:
 
     ``ue`` is the originating UE when the caller declared one
     (``Request.ue``); None falls back to ``rid % n_ue`` round-robin at
-    trace-binning time.
+    trace-binning time.  ``admits``/``preempts`` hold EVERY admission /
+    preemption tick (a preempted request is re-admitted later, so it can
+    have several); ``admit`` exposes the first admission for the common
+    no-preemption case.
     """
 
     rid: int
     ue: int | None = None
     submit: int | None = None
-    admit: int | None = None
     complete: int | None = None
+    admits: list[int] = dataclasses.field(default_factory=list)
+    preempts: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def admit(self) -> int | None:
+        """First admission tick (time-to-first-service)."""
+        return self.admits[0] if self.admits else None
+
+    @property
+    def last_admit(self) -> int | None:
+        return self.admits[-1] if self.admits else None
 
     @property
     def queueing_ticks(self) -> int | None:
-        if self.submit is None or self.admit is None:
+        """Submit -> first admission (initial queue wait)."""
+        if self.submit is None or not self.admits:
             return None
-        return self.admit - self.submit
+        return self.admits[0] - self.submit
 
     @property
     def service_ticks(self) -> int | None:
-        if self.admit is None or self.complete is None:
+        """Final admission -> complete (the service that counted)."""
+        if not self.admits or self.complete is None:
             return None
-        return self.complete - self.admit
+        return self.complete - self.admits[-1]
 
 
 class TrafficRecorder:
@@ -72,7 +96,10 @@ class TrafficRecorder:
         ev.submit = t
 
     def record_admit(self, rid: int, t: int) -> None:
-        self.events.setdefault(rid, RequestEvents(rid=rid)).admit = t
+        self.events.setdefault(rid, RequestEvents(rid=rid)).admits.append(t)
+
+    def record_preempt(self, rid: int, t: int) -> None:
+        self.events.setdefault(rid, RequestEvents(rid=rid)).preempts.append(t)
 
     def record_complete(self, rid: int, t: int) -> None:
         self.events.setdefault(rid, RequestEvents(rid=rid)).complete = t
@@ -110,16 +137,47 @@ class TrafficRecorder:
 
     def latency_stats(self, start: str = "submit",
                       end: str = "complete") -> dict:
-        """Summary stats of :meth:`latencies`: count, mean, p50, p99, max
-        (ticks).  Empty when no request has both events."""
+        """Summary stats of :meth:`latencies`: count, mean, p50, p90, p99,
+        max, plus ``mean_queue_wait``.
+
+        Units are ENGINE TICKS throughout (one ``ServingEngine.step()`` ==
+        one tick; idle ticks advance the clock too), not wall seconds --
+        tick stats are deterministic across machines, wall time is not.
+        ``mean_queue_wait`` averages the queue-wait stage of
+        :meth:`delay_breakdowns` (total queued ticks including post-
+        preemption requeues, excluding each admission tick) over the
+        requests with a full lifecycle; it is omitted when none completed.
+        Safe on empty (``{"n": 0}``) and single-event sets -- no numpy
+        warnings either way.
+        """
         lat = self.latencies(start, end)
         if not len(lat):
             return {"n": 0}
-        return {"n": int(len(lat)),
-                "mean": float(np.mean(lat)),
-                "p50": float(np.percentile(lat, 50)),
-                "p99": float(np.percentile(lat, 99)),
-                "max": int(np.max(lat))}
+        out = {"n": int(len(lat)),
+               "mean": float(np.mean(lat)),
+               "p50": float(np.percentile(lat, 50)),
+               "p90": float(np.percentile(lat, 90)),
+               "p99": float(np.percentile(lat, 99)),
+               "max": int(np.max(lat))}
+        waits = [b.queue_wait for b in self.delay_breakdowns().values()]
+        if waits:
+            out["mean_queue_wait"] = float(np.mean(waits))
+        return out
+
+    def delay_breakdowns(self) -> dict:
+        """rid -> :class:`repro.obs.DelayBreakdown` for every request with
+        a full lifecycle (submit + >=1 admit + complete): E2E ticks split
+        onto the paper's serial-queue stages, summing exactly (see
+        ``repro/obs/breakdown.py`` for the stage table and proof)."""
+        from ..obs.breakdown import from_events
+        out = {}
+        for rid in sorted(self.events):
+            ev = self.events[rid]
+            b = from_events(rid, ev.submit, ev.admits, ev.preempts,
+                            ev.complete)
+            if b is not None:
+                out[rid] = b
+        return out
 
     def to_trace(self, n_ue: int, *, bin_ticks: int = 1, slot_s: float = 1.0,
                  which: str = "submit", horizon: int | None = None) -> Trace:

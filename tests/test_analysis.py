@@ -344,6 +344,45 @@ def test_host_sync_host_data_is_clean():
     assert found == []
 
 
+def test_host_sync_obs_hot_zone_near_miss():
+    # the telemetry read sites (repro/obs/enginehooks.py) are hot zones by
+    # path: a gauge that "reads" a device value via float() IS a
+    # device->host sync in the tick path and must be flagged ...
+    found = lint("""
+        import jax.numpy as jnp
+
+        class EngineHooks:
+            def on_decode_tick(self, engine, t0_us, live):
+                toks = jnp.argmax(engine.last_logits, -1)
+                self.tokens_gauge.set(float(toks[0]))
+    """, path="src/repro/obs/enginehooks.py")
+    assert rules_of(found) == ["host-sync"]
+
+
+def test_host_sync_obs_hot_zone_host_reads_clean():
+    # ... while the contract pattern -- reading host state the engine
+    # already materialized (numpy rows, queue lengths, free lists) --
+    # lints clean in the same function
+    found = lint("""
+        class EngineHooks:
+            def on_decode_tick(self, engine, t0_us, live):
+                self.decode_ticks.inc(engine.decode_steps)
+
+            def sample(self, engine):
+                self.queue_depth.set(len(engine.queue))
+                self.pool_free.set(engine.allocator.n_free)
+    """, path="src/repro/obs/enginehooks.py")
+    assert found == []
+
+
+def test_host_sync_real_obs_module_is_lint_clean():
+    # the shipped telemetry hooks must satisfy their own contract with no
+    # suppressions and no baseline entries
+    found = lint_paths(paths=["src/repro/obs"])
+    assert found == [], [f"{f.path}:{f.line} {f.rule}: {f.message}"
+                         for f in found]
+
+
 # ---------------------------------------------------------------------------
 # pallas-wrapper
 # ---------------------------------------------------------------------------

@@ -1,0 +1,294 @@
+"""Telemetry subsystem: metrics semantics, tracer round-trips, and the
+delay-breakdown exactness contract (stage sums == E2E, both engines)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import transformer
+from repro.obs import Telemetry
+from repro.obs.breakdown import (STAGES, DelayBreakdown, from_events,
+                                 stage_summary)
+from repro.obs.metrics import (Counter, Histogram, MetricsRegistry,
+                               log_buckets)
+from repro.obs.tracer import SpanTracer
+from repro.serving.engine import Request, ServingEngine
+from repro.traffic import TrafficRecorder
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=2)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_log_buckets():
+    assert log_buckets(1.0, 8.0, base=2.0) == (1.0, 2.0, 4.0, 8.0)
+    assert log_buckets(1.0, 9.0, base=2.0)[-1] >= 9.0
+
+
+def test_counter_semantics():
+    c = Counter("x", "")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_histogram_bucket_boundaries():
+    # value ON a boundary lands in that bucket (le is inclusive, like
+    # Prometheus); above the top bound lands in +Inf
+    h = Histogram("x", "", buckets=[1, 2, 4, 8])
+    for v in (2.0, 2.5, 9.0, 0.5):
+        h.observe(v)
+    cum = dict(h.cumulative())
+    assert cum["1"] == 1           # 0.5
+    assert cum["2"] == 2           # + 2.0 exactly on the boundary
+    assert cum["4"] == 3           # + 2.5
+    assert cum["8"] == 3           # nothing in (4, 8]
+    assert cum["+Inf"] == 4        # + 9.0
+    assert h.count == 4
+    assert h.sum == pytest.approx(14.0)
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    m = MetricsRegistry()
+    a = m.counter("reqs_total", "", engine="x")
+    assert m.counter("reqs_total", engine="x") is a
+    assert m.counter("reqs_total", engine="y") is not a
+    with pytest.raises(ValueError):
+        m.gauge("reqs_total", engine="x")
+
+
+def test_prometheus_exposition_format():
+    m = MetricsRegistry()
+    m.counter("reqs_total", "requests", engine="c").inc(3)
+    m.gauge("depth", "queue depth").set(2)
+    h = m.histogram("lat", "latency", buckets=[1, 2], engine="c")
+    h.observe(1.5)
+    text = m.to_prometheus()
+    assert '# HELP reqs_total requests' in text
+    assert '# TYPE reqs_total counter' in text
+    assert 'reqs_total{engine="c"} 3' in text
+    assert "depth 2" in text
+    # bucket lines are cumulative with an +Inf terminal; _sum/_count ride
+    assert 'lat_bucket{engine="c",le="1"} 0' in text
+    assert 'lat_bucket{engine="c",le="2"} 1' in text
+    assert 'lat_bucket{engine="c",le="+Inf"} 1' in text
+    assert 'lat_count{engine="c"} 1' in text
+    # HELP/TYPE emitted once per metric name
+    assert text.count("# TYPE reqs_total") == 1
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_chrome_roundtrip(tmp_path):
+    tr = SpanTracer(capacity=16)
+    tr.instant("submit", cat="lifecycle", rid=1)
+    t0 = tr.now_us()
+    tr.complete("decode_tick", t0, t0 + 100.0, live=2)
+    tr.counter("queue_depth", 3)
+    path = tmp_path / "trace.json"
+    tr.export_chrome(path)
+    doc = json.loads(path.read_text())
+    assert doc["traceEvents"] == tr.to_chrome()["traceEvents"]
+    assert SpanTracer.load_chrome(path) == doc["traceEvents"]
+    phs = [e["ph"] for e in doc["traceEvents"]]
+    assert phs == ["i", "X", "C"]
+    x = doc["traceEvents"][1]
+    assert x["dur"] == pytest.approx(100.0)
+    assert x["args"]["live"] == 2
+
+
+def test_tracer_jsonl_roundtrip(tmp_path):
+    tr = SpanTracer(capacity=16)
+    tr.instant("a")
+    tr.instant("b", rid=7)
+    path = tmp_path / "spans.jsonl"
+    tr.export_jsonl(path)
+    assert SpanTracer.load_jsonl(path) == tr.to_chrome()["traceEvents"]
+
+
+def test_tracer_ring_buffer_bounded():
+    tr = SpanTracer(capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    evs = tr.events()
+    assert len(evs) == 4
+    assert evs[-1]["name"] == "e9"
+
+
+def test_tracer_span_contextmanager():
+    tr = SpanTracer(capacity=4)
+    with tr.span("work", tag="x"):
+        pass
+    (ev,) = tr.events()
+    assert ev["name"] == "work" and ev["ph"] == "X"
+    assert ev["args"]["tag"] == "x"
+    assert ev["dur"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# delay breakdown algebra
+# ---------------------------------------------------------------------------
+
+def test_breakdown_no_preemption():
+    b = from_events(1, submit=0, admits=[3], preempts=[], complete=7)
+    assert (b.queue_wait, b.prefill, b.decode, b.preempted) == (2, 1, 4, 0)
+    assert b.e2e == 7 and b.n_admits == 1 and b.n_preempts == 0
+
+
+def test_breakdown_complete_at_admission():
+    b = from_events(1, submit=0, admits=[1], preempts=[], complete=1)
+    assert (b.queue_wait, b.prefill, b.decode, b.preempted) == (0, 1, 0, 0)
+    assert b.e2e == 1
+
+
+def test_breakdown_with_preemption_sums_exactly():
+    # submit 0, admit 2, preempted 5, re-admit 6, complete 9:
+    # wait = (2-0-1) + (6-5-1) = 1, prefill = 2 admissions,
+    # preempted-recompute = 5-2 = 3, decode = 9-6 = 3 -> e2e 9
+    b = from_events(1, submit=0, admits=[2, 6], preempts=[5], complete=9)
+    assert (b.queue_wait, b.prefill, b.decode, b.preempted) == (1, 2, 3, 3)
+    assert b.e2e == 9 == b.queue_wait + b.prefill + b.decode + b.preempted
+
+
+def test_breakdown_in_flight_and_invalid():
+    assert from_events(1, submit=0, admits=[2], preempts=[],
+                       complete=None) is None
+    assert from_events(1, submit=None, admits=[], preempts=[],
+                       complete=None) is None
+    with pytest.raises(ValueError):
+        from_events(1, submit=0, admits=[2, 4], preempts=[], complete=9)
+    with pytest.raises(ValueError):
+        from_events(1, submit=5, admits=[2], preempts=[], complete=9)
+
+
+def test_stage_summary_empty_and_keys():
+    assert stage_summary({})[STAGES[0]] == {"n": 0}
+    b = DelayBreakdown(rid=1, queue_wait=1, prefill=1, decode=2,
+                       preempted=0, n_admits=1, n_preempts=0)
+    s = stage_summary({1: b})
+    assert s["e2e"]["n"] == 1 and s["e2e"]["max"] == 4
+    assert set(s) == set(STAGES)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: stage sums == E2E, exactly, on both engines
+# ---------------------------------------------------------------------------
+
+def _drive(cfg, params, *, sync, **engine_kw):
+    """Bursty replay with telemetry at stride 1; returns (eng, rec, tel)."""
+    rng = np.random.default_rng(3)
+    tel = Telemetry(sample_every=1)
+    rec = TrafficRecorder()
+    eng = ServingEngine(cfg, params, slots=2, s_max=32, recorder=rec,
+                        sync_batching=sync, telemetry=tel, **engine_kw)
+    sched = [(int(rng.integers(0, 6)), i,
+              rng.integers(0, cfg.vocab, int(rng.integers(4, 11)))
+              .astype(np.int32), int(rng.integers(2, 7)))
+             for i in range(8)]
+    sched.sort()
+    i = 0
+    for _ in range(500):
+        while i < len(sched) and sched[i][0] <= eng.clock:
+            t, rid, p, m = sched[i]
+            eng.submit(Request(rid=rid, prompt=p, max_new=m))
+            i += 1
+        busy = eng.step()
+        if i == len(sched) and not busy:
+            break
+    return eng, rec, tel
+
+
+def _assert_exact(rec):
+    bds = rec.delay_breakdowns()
+    assert bds, "no completed requests"
+    for rid, b in bds.items():
+        ev = rec.events[rid]
+        assert b.e2e == ev.complete - ev.submit, f"rid {rid}"
+        assert (b.queue_wait + b.prefill + b.decode + b.preempted
+                == b.e2e), f"rid {rid}"
+        assert min(b.queue_wait, b.prefill, b.decode, b.preempted) >= 0
+    return bds
+
+
+@pytest.mark.parametrize("sync", [False, True], ids=["continuous", "sync"])
+def test_stage_sums_equal_e2e(setup, sync):
+    cfg, params = setup
+    eng, rec, tel = _drive(cfg, params, sync=sync)
+    bds = _assert_exact(rec)
+    assert len(bds) == 8
+    # counters agree with engine ground truth after drain
+    snap = tel.metrics.snapshot()
+    mode = "sync" if sync else "continuous"
+    assert snap[f'serving_completed_total{{engine="{mode}"}}'] == 8
+    assert snap[f'serving_submitted_total{{engine="{mode}"}}'] == 8
+    assert (snap[f'serving_decode_steps_total{{engine="{mode}"}}']
+            == eng.decode_steps)
+
+
+def test_stage_sums_exact_under_preemption(setup):
+    """The preemption-forcing fixture (pool smaller than the slots need):
+    recompute overhead must surface in the ``preempted`` stage and the
+    partition must still telescope exactly."""
+    cfg, params = setup
+    rng = np.random.default_rng(23)
+    tel = Telemetry(sample_every=1)
+    rec = TrafficRecorder()
+    eng = ServingEngine(cfg, params, slots=3, s_max=32, kv_block=4,
+                        kv_blocks=7, recorder=rec, telemetry=tel)
+    for i, n in enumerate((9, 10, 12)):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, n)
+                           .astype(np.int32), max_new=8))
+    eng.run_until_idle()
+    assert eng.preemptions > 0, "pool was sized to force preemption"
+    bds = _assert_exact(rec)
+    assert sum(b.n_preempts for b in bds.values()) == eng.preemptions
+    assert any(b.preempted > 0 for b in bds.values())
+    assert any(b.n_admits > 1 for b in bds.values())
+    snap = tel.metrics.snapshot()
+    assert (snap['serving_preemptions_total{engine="continuous"}']
+            == eng.preemptions)
+
+
+def test_engine_gauges_and_spans(setup):
+    cfg, params = setup
+    eng, rec, tel = _drive(cfg, params, sync=False)
+    snap = tel.metrics.snapshot()
+    # pool fully drained: utilization back to 0, all blocks free
+    assert snap['kvpool_blocks_free{engine="continuous"}'] \
+        == eng.allocator.capacity
+    assert snap['kvpool_utilization{engine="continuous"}'] == 0.0
+    assert snap['serving_prefill_compiles{engine="continuous"}'] \
+        == eng.prefill_compiles
+    names = {e["name"] for e in tel.tracer.events()}
+    assert {"submit", "admit", "complete", "prefill",
+            "decode_tick"} <= names
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_smoke(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    prom = tmp_path / "metrics.prom"
+    trace = tmp_path / "trace.json"
+    rc = main(["--layers", "1", "--requests", "6", "--slots", "2",
+               "--prom", str(prom), "--trace", str(trace)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "exactness: stage sums == recorded E2E" in out and "OK" in out
+    assert "# TYPE serving_e2e_ticks histogram" in prom.read_text()
+    assert json.loads(trace.read_text())["traceEvents"]

@@ -204,10 +204,48 @@ def test_recorder_latency_stats():
     st = rec.latency_stats()
     assert st["n"] == 3 and st["max"] == 10
     np.testing.assert_allclose(st["p50"], 4.0)
+    np.testing.assert_allclose(st["p90"], 8.8)
+    # mean of the breakdown queue-wait stage: every request waited
+    # admit - submit - 1 = 0 ticks here
+    np.testing.assert_allclose(st["mean_queue_wait"], 0.0)
     # queueing-only view through the same API
     np.testing.assert_array_equal(rec.latencies("submit", "admit"), [1, 1, 1])
     with pytest.raises(ValueError, match="unknown event"):
         rec.latency_stats(end="nope")
+
+
+def test_recorder_latency_stats_edge_cases(recwarn):
+    """Empty and single-event sets: no numpy warnings, stable keys, and
+    mean_queue_wait only appears once a request has a full lifecycle."""
+    rec = traffic.TrafficRecorder()
+    assert rec.latency_stats() == {"n": 0}
+    rec.record_submit(0, 2, ue=0)
+    rec.record_complete(0, 9)               # complete without admit:
+    st = rec.latency_stats()                # latency counts, breakdown can't
+    assert st["n"] == 1
+    assert st["p50"] == st["p90"] == st["p99"] == 7.0
+    assert st["max"] == 7 and "mean_queue_wait" not in st
+    rec.record_admit(0, 5)                  # full lifecycle now
+    st = rec.latency_stats()
+    np.testing.assert_allclose(st["mean_queue_wait"], 2.0)   # 5 - 2 - 1
+    assert not [w for w in recwarn if "RuntimeWarning"
+                in str(w.category)], "numpy warned on small input"
+
+
+def test_recorder_delay_breakdowns_with_preemption():
+    """record_preempt feeds the breakdown: stage sums telescope to E2E."""
+    rec = traffic.TrafficRecorder()
+    rec.record_submit(0, 0, ue=1)
+    rec.record_admit(0, 2)
+    rec.record_preempt(0, 5)
+    rec.record_admit(0, 6)
+    rec.record_complete(0, 9)
+    ev = rec.events[0]
+    assert ev.admit == 2 and ev.last_admit == 6
+    assert ev.queueing_ticks == 2 and ev.service_ticks == 3
+    (b,) = rec.delay_breakdowns().values()
+    assert (b.queue_wait, b.prefill, b.decode, b.preempted) == (1, 2, 3, 3)
+    assert b.e2e == 9 and b.n_preempts == 1
 
 
 def test_recorder_horizon_and_binning():
