@@ -4,7 +4,7 @@ scenario-grid A/B + the roofline table.
 
 Prints ``name,us_per_call,derived`` CSV per experiment, as required, and
 writes the canonical ``BENCH_N.json`` perf-trajectory artifact at the repo
-root (currently ``BENCH_8.json``), which folds together:
+root (currently ``BENCH_9.json``), which folds together:
 
 * ``serving``       -- continuous-vs-sync replay latency, goodput,
                        slot-steps/sec, prefill-compile counts
@@ -13,6 +13,9 @@ root (currently ``BENCH_8.json``), which folds together:
                        (benchmarks/scenario_grid.bench_payload)
 * ``kernels``       -- the kernel micro-benchmark rows
                        (benchmarks/kernels_micro.bench_all)
+* ``sanitize_overhead`` -- per-tick p50 with the KV-pool sanitizer off vs
+                       on, identical schedule, identical tokens
+                       (benchmarks/serving_latency.sanitize_overhead)
 
 ``--json-only`` skips the slow paper-figure / ablation / roofline legs and
 just measures + writes the JSON artifact (the CI bench leg uses this).
@@ -31,7 +34,7 @@ def _row(name, us, derived):
 
 def build_bench_payload(*, grid_cells: int = 8, grid_ues: int = 4,
                         grid_steps: int = 24, grid_repeats: int = 2) -> dict:
-    """Measure the three tracked subsystems and assemble the BENCH_8 body."""
+    """Measure the four tracked subsystems and assemble the BENCH_9 body."""
     from . import kernels_micro, scenario_grid, serving_latency
     serving = serving_latency.bench_all()
     kernels = [{"name": name, "us_per_call": round(us, 1), "derived": derived}
@@ -39,8 +42,9 @@ def build_bench_payload(*, grid_cells: int = 8, grid_ues: int = 4,
     grid = scenario_grid.bench_payload(cells=grid_cells, ues=grid_ues,
                                        steps=grid_steps,
                                        repeats=grid_repeats)
-    return {"bench": 8, "serving": serving, "scenario_grid": grid,
-            "kernels": kernels}
+    sanitize = serving_latency.sanitize_overhead()
+    return {"bench": 9, "serving": serving, "scenario_grid": grid,
+            "kernels": kernels, "sanitize_overhead": sanitize}
 
 
 def _emit_bench_rows(payload: dict) -> None:
@@ -56,10 +60,15 @@ def _emit_bench_rows(payload: dict) -> None:
          f"batched_slots_per_s={g['batched']['slots_per_s']:.0f}"
          f";loop_slots_per_s={g['loop']['slots_per_s']:.0f}"
          f";speedup={g['batched_speedup']:.2f}x")
+    s = payload["sanitize_overhead"]
+    _row("sanitize_overhead", s["p50_tick_us"]["off"],
+         f"on_p50_us={s['p50_tick_us']['on']:.1f}"
+         f";on_over_off={s['on_over_off']:.2f}x"
+         f";outputs_match={'OK' if s['outputs_match'] else 'FAIL'}")
 
 
 def _write_bench_json(payload: dict) -> None:
-    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_8.json")
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_9.json")
     with open(bench_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     _row("bench_json", 0.0, f"wrote={os.path.normpath(bench_path)}")
@@ -68,7 +77,7 @@ def _write_bench_json(payload: dict) -> None:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json-only", action="store_true",
-                    help="measure and write BENCH_8.json only (skips the "
+                    help="measure and write BENCH_9.json only (skips the "
                          "paper-figure, ablation, and roofline legs)")
     args = ap.parse_args(argv)
 
@@ -118,7 +127,7 @@ def main(argv=None) -> int:
         _row(f"ablation_v[V={r['V']:g}]", (time.time() - t0) * 1e6 / 3,
              f"delay={r['delay_s']:.4f}s;qE={r['q_energy_final']:.1f}")
 
-    # -- kernels + serving A/B + scenario grid -> BENCH_8.json -----------------
+    # -- kernels + serving A/B + scenario grid -> BENCH_9.json -----------------
     payload = build_bench_payload()
     _emit_bench_rows(payload)
     _write_bench_json(payload)

@@ -142,6 +142,60 @@ def bench_all(*, slots: int = 2, s_max: int = 32, ticks: int = 48,
     return out
 
 
+def sanitize_overhead(*, slots: int = 2, s_max: int = 32, seed: int = 0,
+                      n_layers: int = 2, n_requests: int = 6,
+                      max_new: int = 16) -> dict:
+    """Per-tick p50 cost of the engine with the sanitizer off vs on.
+
+    The off run IS the shipping path (`sanitize=False` costs one
+    ``is None`` check per lifecycle edge); the on run pays shadow
+    ownership bookkeeping plus a checkify host sync per dispatch.  Both
+    replay the identical schedule and must emit identical greedy tokens
+    -- the sanitizer may only change *cost*, never results.  The p50
+    (not mean) makes the number robust to the compile ticks at the
+    front of each run.
+    """
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import transformer
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=n_layers)
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab,
+                            int(rng.integers(4, 12))).astype(np.int32)
+               for _ in range(n_requests)]
+
+    def run(sanitize: bool):
+        eng = ServingEngine(cfg, params, slots=slots, s_max=s_max,
+                            sanitize=sanitize)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=max_new))
+        durs = []
+        while True:
+            t0 = time.perf_counter()
+            alive = eng.step()
+            durs.append(time.perf_counter() - t0)
+            if not alive:
+                break
+        outs = [list(r.out) for r in sorted(eng.pop_completed(),
+                                            key=lambda r: r.rid)]
+        return float(np.median(durs)) * 1e6, len(durs), outs
+
+    off_us, off_ticks, off_out = run(False)
+    on_us, on_ticks, on_out = run(True)
+    return {
+        "config": {"arch": cfg.name, "n_layers": n_layers, "slots": slots,
+                   "s_max": s_max, "requests": n_requests,
+                   "max_new": max_new, "seed": seed},
+        "p50_tick_us": {"off": round(off_us, 1), "on": round(on_us, 1)},
+        "ticks": {"off": off_ticks, "on": on_ticks},
+        "on_over_off": round(on_us / max(off_us, 1e-9), 3),
+        "outputs_match": off_out == on_out,
+    }
+
+
 def rows(payload: dict):
     """Flatten the payload into benchmarks/run.py CSV rows."""
     for workload, w in payload["workloads"].items():

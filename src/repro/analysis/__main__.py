@@ -6,8 +6,15 @@ Modes (combinable; ``--check`` is the union CI runs):
                 examples (suppressions + baseline applied)
   --contracts   eval_shape sweep: every registry config x every serving
                 path + pspec divisibility
+  --shardcheck  abstract sharding/dtype verification: walks the pspec
+                policies over every registry config x model degrees
+                {1,2,4,8} on a shape-only mesh (no arrays built)
   --retrace     compile-count probes (steady-state serving, grid rollouts)
+  --sanitize    run the sanitized serving engine through a flash-crowd
+                schedule (KV-pool shadow ownership + checkify guards)
   --check       all of the above; exit 1 on any unsuppressed finding
+                (also fails baseline entries whose note is still the
+                --write-baseline placeholder)
 
 Baseline workflow:
 
@@ -39,8 +46,12 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--lint", action="store_true", help="AST rules only")
     p.add_argument("--contracts", action="store_true",
                    help="eval_shape registry sweep only")
+    p.add_argument("--shardcheck", action="store_true",
+                   help="abstract sharding/dtype verification only")
     p.add_argument("--retrace", action="store_true",
                    help="compile-count probes only")
+    p.add_argument("--sanitize", action="store_true",
+                   help="sanitized-engine flash-crowd run only")
     p.add_argument("--paths", nargs="*", default=None,
                    help=f"files/dirs to lint (default: "
                         f"{' '.join(DEFAULT_PATHS)})")
@@ -75,8 +86,11 @@ def main(argv=None) -> int:
 
     do_lint = args.lint or args.check or args.write_baseline
     do_contracts = args.contracts or args.check
+    do_shardcheck = args.shardcheck or args.check
     do_retrace = args.retrace or args.check
-    if not (do_lint or do_contracts or do_retrace):
+    do_sanitize = args.sanitize or args.check
+    if not (do_lint or do_contracts or do_shardcheck or do_retrace
+            or do_sanitize):
         do_lint = True                   # bare invocation: lint + report
 
     rc = 0
@@ -93,19 +107,26 @@ def main(argv=None) -> int:
             print("justify every 'note' entry or fix the finding "
                   "(docs/analysis.md)")
             return 0
-        new, old, _ = apply_baseline(found, root=root,
-                                     baseline_path=baseline_path)
+        new, old, baseline = apply_baseline(found, root=root,
+                                            baseline_path=baseline_path)
+        stale = F.placeholder_entries(baseline) if args.check else []
         report["lint"] = {"new": [f.render() for f in new],
-                          "baselined": [f.render() for f in old]}
+                          "baselined": [f.render() for f in old],
+                          "placeholder_notes": [
+                              f"{e.get('path', '?')} [{e.get('rule', '?')}] "
+                              f"{e.get('fingerprint', '?')}" for e in stale]}
         if not args.as_json:
             for f in new:
                 print(f.render())
             if old and args.verbose:
                 for f in old:
                     print(f"{f.render()}  [baselined]")
+            for line in report["lint"]["placeholder_notes"]:
+                print(f"baseline entry never justified (note is still the "
+                      f"placeholder): {line}")
             print(f"reprolint: {len(new)} finding(s), "
                   f"{len(old)} baselined")
-        if new:
+        if new or stale:
             rc = 1
 
     if do_contracts:
@@ -124,6 +145,22 @@ def main(argv=None) -> int:
         if r.failures:
             rc = 1
 
+    if do_shardcheck:
+        from .shardcheck import run_shardcheck
+        r = run_shardcheck(verbose=args.verbose and not args.as_json)
+        report["shardcheck"] = {
+            "covered": len(r.covered), "elapsed_s": round(r.elapsed_s, 2),
+            "skipped": [list(s) for s in r.skipped],
+            "failures": [f.render() for f in r.failures]}
+        if not args.as_json:
+            for f in r.failures:
+                print(f.render())
+            print(f"shardcheck: {len(r.covered)} arch-degree legs in "
+                  f"{r.elapsed_s:.1f}s, {len(r.failures)} failure(s), "
+                  f"{len(r.skipped)} skip(s)")
+        if r.failures:
+            rc = 1
+
     if do_retrace:
         from .retrace import run_retrace
         fails = run_retrace()
@@ -133,6 +170,24 @@ def main(argv=None) -> int:
                 print(f.render())
             print(f"retrace: {len(fails)} failure(s)")
         if fails:
+            rc = 1
+
+    if do_sanitize:
+        from .sanitize import run_sanitize
+        r = run_sanitize()
+        report["sanitize"] = {
+            "ticks": r.ticks, "requests": r.requests,
+            "preemptions": r.preemptions, "block_churn": r.block_churn,
+            "elapsed_s": round(r.elapsed_s, 2),
+            "failures": [f.render() for f in r.failures]}
+        if not args.as_json:
+            for f in r.failures:
+                print(f.render())
+            print(f"sanitize: {r.ticks} ticks, {r.requests} request(s), "
+                  f"{r.preemptions} preemption(s), {r.block_churn} block "
+                  f"event(s) in {r.elapsed_s:.1f}s, "
+                  f"{len(r.failures)} failure(s)")
+        if r.failures:
             rc = 1
 
     if args.as_json:

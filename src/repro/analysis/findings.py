@@ -23,6 +23,11 @@ import re
 _SUPPRESS_RE = re.compile(
     r"#\s*reprolint:\s*ignore(?:\[([A-Za-z0-9_,\- ]+)\])?")
 
+# The note ``--write-baseline`` stamps on every grandfathered entry.  A
+# baseline entry is only legitimate once a human replaces this with an
+# actual justification; ``--check`` fails on any entry still carrying it.
+PLACEHOLDER_NOTE = "TODO: justify or fix (see docs/analysis.md)"
+
 
 @dataclasses.dataclass(frozen=True)
 class Finding:
@@ -91,11 +96,20 @@ def write_baseline(path, findings: list[Finding]) -> None:
             "rule": f.rule,
             "path": f.path,
             "snippet": f.snippet,
-            "note": "TODO: justify or fix (see docs/analysis.md)",
+            "note": PLACEHOLDER_NOTE,
         })
     with open(path, "w") as fh:
         json.dump({"version": 1, "findings": entries}, fh, indent=2)
         fh.write("\n")
+
+
+def placeholder_entries(baseline: dict[str, dict]) -> list[dict]:
+    """Baseline entries nobody ever justified: the note is still the
+    ``--write-baseline`` placeholder (or blank).  A baseline is a debt
+    ledger, not an amnesty -- ``--check`` fails on these."""
+    stale = [e for e in baseline.values()
+             if str(e.get("note", "")).strip() in ("", PLACEHOLDER_NOTE)]
+    return sorted(stale, key=lambda e: (e.get("path", ""), e.get("rule", "")))
 
 
 def split_baselined(findings: list[Finding], baseline: dict[str, dict]):

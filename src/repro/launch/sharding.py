@@ -256,19 +256,26 @@ def shard_ctx(mesh, fn):
     return wrapped
 
 
+def batch_spec(mesh, leaf, *, shard_batch=True) -> P:
+    """PartitionSpec for one token/embedding input leaf: batch over all DP
+    axes when divisible, replicated otherwise.  Pure policy (no
+    NamedSharding built), so ``analysis.shardcheck`` can walk it over a
+    shape-only mesh."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # 0-d leaves (e.g. step counters riding along in an input tree) have
+    # no batch dim to shard: replicate instead of indexing shape[0].
+    if (not shard_batch or leaf.ndim == 0
+            or leaf.shape[0] % _mesh_prod(mesh, dp) != 0):
+        return P()
+    return P(dp, *([None] * (len(leaf.shape) - 1)))
+
+
 def batch_shardings(mesh, cfg, batch_shape: Any, *, shard_batch=True):
     """Token/embedding inputs: batch over all DP axes (when divisible)."""
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
-    def fn(path, leaf):
-        # 0-d leaves (e.g. step counters riding along in an input tree) have
-        # no batch dim to shard: replicate instead of indexing shape[0].
-        if (not shard_batch or leaf.ndim == 0
-                or leaf.shape[0] % _mesh_prod(mesh, dp) != 0):
-            return NamedSharding(mesh, P())
-        rest = [None] * (len(leaf.shape) - 1)
-        return NamedSharding(mesh, P(dp, *rest))
-    return jax.tree.map(lambda l: fn(None, l), batch_shape)
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(mesh, l,
+                                                 shard_batch=shard_batch)),
+        batch_shape)
 
 
 def _mesh_prod(mesh, axes) -> int:
@@ -287,42 +294,90 @@ def cache_shardings(mesh, cfg, cache_shape: Any, batch: int):
     divisible; for kv-head counts < model size the sequence axis takes
     "model" instead (the 1.37TB qwen110 decode cache needs 256-way sharding).
     """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(mesh, path, leaf, batch)),
+        cache_shape)
+
+
+def cache_spec(mesh, path, leaf, batch: int) -> P:
+    """PartitionSpec for one serving-cache leaf (policy of
+    :func:`cache_shardings`, exported for ``analysis.shardcheck``)."""
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dp_n = _mesh_prod(mesh, dp)
-
-    def fn(path, leaf):
-        shape = leaf.shape
-        p = _path_str(path)
-        if leaf.ndim >= 4 and ("/k" in p or "/v" in p or p.endswith("k")
-                               or p.endswith("v")):
-            stacked = leaf.ndim == 5
-            lead = (None,) if stacked else ()
-            b, s, kv, hd = shape[-4:]
-            batch_ax = dp if b % dp_n == 0 else None
-            seq_ax = None
-            kv_ax = _shard_if(mesh, kv, "model")
-            if kv_ax is None:
-                seq_ax = _shard_if(mesh, s, "model")
-            if batch_ax is None and seq_ax is None:
-                seq_ax = _shard_if(mesh, s, "data")
-            elif batch_ax is None:
-                # combine: seq carries model; nothing else shardable
-                pass
-            return NamedSharding(mesh, P(*lead, batch_ax, seq_ax, kv_ax, None))
-        # Recurrent states / ring positions / conv tails: shard the batch dim
-        # only where the cache layout puts it -- leading for tail leaves
-        # (B, ...), second for stacked leaves (units, B, ...).  Matching B at
-        # arbitrary positions would shard dims that merely coincide with the
-        # batch size (e.g. a (heads, d, B)-shaped tensor's last dim).
-        if dp and batch % dp_n == 0 and leaf.ndim >= 1:
-            if shape[0] == batch:
-                return NamedSharding(mesh, P(dp, *[None] * (leaf.ndim - 1)))
-            if leaf.ndim >= 2 and shape[1] == batch:
-                return NamedSharding(
-                    mesh, P(None, dp, *[None] * (leaf.ndim - 2)))
-        return NamedSharding(mesh, P())
-    return jax.tree_util.tree_map_with_path(fn, cache_shape)
+    shape = leaf.shape
+    p = _path_str(path)
+    # Exact leaf-name match: the KV tensors live under leaves literally
+    # named "k"/"v".  A substring/suffix match is a trap -- "conv" ends
+    # with "v", and a suffix match hands the (units, B, ksize, d) conv
+    # cache the (B, S, KV, hd) KV layout, sharding its BATCH dim over
+    # "model" (caught by analysis.shardcheck).
+    if leaf.ndim >= 4 and p.rsplit("/", 1)[-1] in ("k", "v"):
+        stacked = leaf.ndim == 5
+        lead = (None,) if stacked else ()
+        b, s, kv, hd = shape[-4:]
+        batch_ax = dp if b % dp_n == 0 else None
+        seq_ax = None
+        kv_ax = _shard_if(mesh, kv, "model")
+        if kv_ax is None:
+            seq_ax = _shard_if(mesh, s, "model")
+        if batch_ax is None and seq_ax is None:
+            seq_ax = _shard_if(mesh, s, "data")
+        elif batch_ax is None:
+            # combine: seq carries model; nothing else shardable
+            pass
+        return P(*lead, batch_ax, seq_ax, kv_ax, None)
+    # Recurrent states / ring positions / conv tails: shard the batch dim
+    # only where the cache layout puts it -- leading for tail leaves
+    # (B, ...), second for stacked leaves (units, B, ...).  Matching B at
+    # arbitrary positions would shard dims that merely coincide with the
+    # batch size (e.g. a (heads, d, B)-shaped tensor's last dim).
+    if dp and batch % dp_n == 0 and leaf.ndim >= 1:
+        if shape[0] == batch:
+            return P(dp, *[None] * (leaf.ndim - 1))
+        if leaf.ndim >= 2 and shape[1] == batch:
+            return P(None, dp, *[None] * (leaf.ndim - 2))
+    return P()
 
 
 def replicated(mesh, tree: Any):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def validate_spec(mesh, shape: tuple, spec: P) -> list[str]:
+    """Static invariants for one leaf's PartitionSpec; returns error strings.
+
+    A spec is valid iff every entry names axes that exist on the mesh, no
+    mesh axis is consumed by more than one dimension, the spec is no longer
+    than the leaf's rank, and every sharded dimension divides the product
+    of its axis sizes (the exact-sharding discipline: GSPMD would silently
+    pad a non-dividing dim, breaking the memory model and -- for kv heads
+    -- numerics).  Works on any object exposing ``axis_names``/``shape``
+    (a real Mesh or ``analysis.contracts.ShapeOnlyMesh``), so
+    ``analysis.shardcheck`` runs it with no devices at all.
+    """
+    errs: list[str] = []
+    entries = tuple(spec)
+    if len(entries) > len(shape):
+        return [f"spec {spec} has {len(entries)} entries for a "
+                f"rank-{len(shape)} leaf"]
+    used: dict[str, int] = {}
+    for dim, axes in enumerate(entries):
+        if axes is None:
+            continue
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = 1
+        for a in names:
+            if a not in mesh.axis_names:
+                errs.append(f"dim {dim}: unknown mesh axis {a!r}")
+                continue
+            if a in used:
+                errs.append(f"mesh axis {a!r} consumed twice "
+                            f"(dims {used[a]} and {dim})")
+            else:
+                used[a] = dim
+            total *= mesh.shape[a]
+        if total > 1 and shape[dim] % total:
+            errs.append(f"dim {dim} of shape {tuple(shape)} not divisible "
+                        f"by {names} (={total})")
+    return errs

@@ -18,7 +18,7 @@ Naming and exposition follow Prometheus conventions:
 
 ``MetricsRegistry.to_prometheus()`` renders the whole registry in the text
 exposition format (scrapeable / diffable); ``snapshot()`` gives the same
-numbers as a plain dict for JSON artifacts like ``BENCH_8.json``.
+numbers as a plain dict for JSON artifacts like ``BENCH_9.json``.
 """
 from __future__ import annotations
 

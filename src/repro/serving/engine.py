@@ -107,12 +107,22 @@ class ServingEngine:
     ``kv_blocks`` pool blocks; default sized so every slot can reach
     ``s_max``), youngest-request preemption when the pool runs dry.
     ``sync_batching=True``: the synchronized-batch compat engine.
+
+    ``sanitize=True`` (debug; ``python -m repro.analysis --sanitize``)
+    turns on the memory-safety layer: a :class:`analysis.sanitize.
+    KVSanitizer` shadows every block handoff (double-free, free-of-
+    unowned, cross-slot aliasing, dummy-block writes, leak-at-drain) and
+    the jitted prefill/commit/decode programs run under ``checkify``
+    NaN/index-OOB guards.  Off (the default) the only cost is one
+    ``self._san is None`` check per lifecycle edge -- the same zero-cost
+    discipline as telemetry (docs/serving.md, "Sanitizer runtime").
     """
 
     def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 128,
                  prefill_buckets=None, recorder=None, mesh=None,
                  sync_batching: bool = False, kv_block: int = 16,
-                 kv_blocks: int | None = None, telemetry=None):
+                 kv_blocks: int | None = None, telemetry=None,
+                 sanitize: bool = False):
         self.mesh = mesh
         if mesh is not None:
             from ..launch.sharding import place_params
@@ -147,6 +157,26 @@ class ServingEngine:
             self.obs = EngineHooks(telemetry, self)
         from ..launch.sharding import shard_ctx
 
+        # sanitizer runtime (analysis.sanitize): OFF by default, costing one
+        # `self._san is None` check per lifecycle edge -- same zero-cost
+        # discipline as telemetry.  On, every jitted program gains checkify
+        # NaN/index-OOB guards and the KV pool gets shadow ownership checks.
+        self._san = None
+        self.sanitize = sanitize
+        if sanitize:
+            from ..analysis.sanitize import checkify_wrap
+
+        def _jit(fn, donate=None):
+            """jit one engine program; in sanitize mode wrap it with
+            checkify guards instead (no donation there: the checkified
+            signature threads an error value, and sanitize is a debug
+            mode)."""
+            if sanitize:
+                return shard_ctx(mesh, checkify_wrap(fn))
+            jitted = jax.jit(fn) if donate is None else \
+                jax.jit(fn, donate_argnums=donate)
+            return shard_ctx(mesh, jitted)
+
         # Greedy argmax happens INSIDE the jitted programs: only the (B,)
         # int32 next-token ids ever cross to the host, never the (B, vocab)
         # logits, and the argmax fuses into the decode dispatch instead of
@@ -155,13 +185,13 @@ class ServingEngine:
             logits, cache = out
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-        self._prefill = shard_ctx(mesh, jax.jit(
+        self._prefill = _jit(
             lambda batch, pad: greedy(transformer.prefill(
-                params, cfg, batch, s_max=s_max, pad=pad))))
+                params, cfg, batch, s_max=s_max, pad=pad)))
         if sync_batching:
-            self._decode = shard_ctx(mesh, jax.jit(
+            self._decode = _jit(
                 lambda cache, toks: greedy(transformer.decode_step(
-                    params, cfg, cache, toks))))
+                    params, cfg, cache, toks)))
             return
 
         # -- continuous-batching state ------------------------------------
@@ -182,13 +212,23 @@ class ServingEngine:
         self.owned: list[list[int]] = [[] for _ in range(slots)]
         self._admit_seq = np.full(slots, -1, np.int64)      # admission order
         self._admit_counter = 0
-        self._commit = shard_ctx(mesh, jax.jit(
+        # The per-tick state updates DONATE their input pool (argnum 0):
+        # the engine always rebinds self._pool_state to the result, and
+        # without donation every tick/commit briefly holds TWO full KV
+        # pools live -- the exact peak-memory hazard
+        # `analysis.shardcheck`'s donation probe gates.
+        self._commit = _jit(
             lambda state, solo, pad, slot, ids: kvpool.commit_prefill(
-                state, solo, pad, slot, ids, block_size=kv_block)))
-        self._decode_paged = shard_ctx(mesh, jax.jit(
+                state, solo, pad, slot, ids, block_size=kv_block),
+            donate=0)
+        self._decode_paged = _jit(
             lambda state, toks, table, lens: greedy(
                 transformer.decode_step_paged(params, cfg, state, toks,
-                                              table, lens))))
+                                              table, lens)),
+            donate=0)
+        if sanitize:
+            from ..analysis.sanitize import KVSanitizer
+            self._san = KVSanitizer(self)
 
     @property
     def prefill_compiles(self) -> int:
@@ -321,12 +361,16 @@ class ServingEngine:
             self.remaining[slot] = req.max_new - 1
             self._admit_seq[slot] = self._admit_counter
             self._admit_counter += 1
+            if self._san is not None:
+                self._san.on_alloc(slot, blocks)
             if self.recorder is not None:
                 self.recorder.record_admit(req.rid, self.clock)
             if self.obs is not None:
                 self.obs.on_admit(req, self.clock)
 
     def _release_slot(self, slot: int):
+        if self._san is not None:
+            self._san.on_free(slot, self.owned[slot])
         self.allocator.free(self.owned[slot])
         self.owned[slot] = []
         self.block_tables[slot, :] = 0
@@ -374,6 +418,8 @@ class ServingEngine:
                 if got is not None:
                     self.owned[slot].append(got[0])
                     self.block_tables[slot, bidx] = got[0]
+                    if self._san is not None:
+                        self._san.on_alloc(slot, got)
                     if self.obs is not None:
                         self.obs.on_block_grow()
                     break
@@ -417,6 +463,8 @@ class ServingEngine:
             if self.remaining[i] <= 0:
                 self._release_slot(i)
                 self._complete(req)
+        if self._san is not None:
+            self._san.check_tick()
         return True
 
     # -- synchronized-batch compat mode -------------------------------------
@@ -519,7 +567,10 @@ class ServingEngine:
         self.clock += 1
         if self.sync_batching:
             return self._step_sync()
-        return self._step_continuous()
+        alive = self._step_continuous()
+        if self._san is not None and not alive:
+            self._san.check_drain()         # idle engine: pool fully drained
+        return alive
 
     def pop_completed(self) -> list[Request]:
         """Drain and return requests finished since the last drain, in

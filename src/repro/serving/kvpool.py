@@ -54,6 +54,15 @@ class BlockAllocator:
 
     Block 0 is reserved as the dummy block (idle decode rows write there);
     ``capacity`` is therefore ``n_blocks - 1``.
+
+    Every block is either in the free list or in the handed-out set -- an
+    invariant the allocator itself enforces: ``free()`` of a block it never
+    handed out raises (not just double frees of blocks sitting in the free
+    list), both paths validate their whole argument before mutating
+    anything (a bad batch leaves the allocator untouched), and ``alloc()``
+    rolls its pops back if it detects free-list corruption mid-way.  The
+    sanitizer runtime (``analysis.sanitize``) layers per-slot ownership
+    tracking on top of these checks.
     """
 
     def __init__(self, n_blocks: int, block_size: int):
@@ -65,6 +74,7 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self.block_size = block_size
         self._free: deque[int] = deque(range(1, n_blocks))
+        self._handed: set[int] = set()       # blocks currently checked out
 
     @property
     def capacity(self) -> int:
@@ -74,21 +84,48 @@ class BlockAllocator:
     def n_free(self) -> int:
         return len(self._free)
 
+    def handed_out(self) -> frozenset[int]:
+        """Blocks currently checked out (sanitizer cross-check surface)."""
+        return frozenset(self._handed)
+
     def alloc(self, n: int) -> list[int] | None:
         """Pop ``n`` blocks, or None (and no side effect) if unavailable."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} blocks")
         if n > len(self._free):
             return None
-        return [self._free.popleft() for _ in range(n)]
+        got: list[int] = []
+        for _ in range(n):
+            b = self._free.popleft()
+            if b in self._handed:            # corrupted free list: roll back
+                self._free.extendleft(reversed(got + [b]))
+                raise ValueError(f"free list corrupted: block {b} is both "
+                                 f"free and handed out")
+            got.append(b)
+        self._handed.update(got)
+        return got
 
     def free(self, blocks) -> None:
+        """Return blocks to the free list.  Validates the WHOLE batch before
+        mutating: a double free, a free of a block never handed out, or a
+        duplicate within the batch raises with the allocator unchanged."""
+        blocks = list(blocks)
+        seen: set[int] = set()
         for b in blocks:
             if not 1 <= b < self.n_blocks:
                 raise ValueError(f"block {b} outside pool (dummy block 0 is "
                                  f"never allocated)")
-            if b in self._free:
-                raise ValueError(f"double free of block {b}")
+            if b in seen:
+                raise ValueError(f"double free of block {b} (duplicated "
+                                 f"within one free() batch)")
+            if b not in self._handed:
+                if b in self._free:
+                    raise ValueError(f"double free of block {b}")
+                raise ValueError(f"free of block {b} that was never handed "
+                                 f"out")
+            seen.add(b)
+        for b in blocks:
+            self._handed.discard(b)
             self._free.append(b)
 
 
@@ -259,25 +296,44 @@ def commit_prefill(state, solo, pad, slot, block_ids, *, block_size: int):
                                                 is_leaf=_cache_leaf)
 
 
+def _pool_leaf_spec(mesh, path, leaf):
+    """Placement policy for one decode-state leaf: pool/ring kv-head dims
+    shard over ``"model"`` when divisible, everything else (block-shaped
+    axes, ring positions, recurrent state) replicates."""
+    from jax.sharding import PartitionSpec as P
+
+    if "model" not in mesh.axis_names:
+        return P()
+    m = mesh.shape["model"]
+    last = path[-1]
+    name = str(getattr(last, "name", getattr(last, "key", "")))
+    if name in ("k", "v") and leaf.ndim >= 4 and leaf.shape[-2] % m == 0:
+        return P(*([None] * (leaf.ndim - 2)), "model", None)
+    return P()
+
+
+def decode_state_specs(mesh, state) -> list[tuple]:
+    """``[(path_str, shape, PartitionSpec)]`` for every decode-state leaf --
+    the exact policy :func:`place_decode_state` applies, exported so
+    ``analysis.shardcheck`` can verify it statically (``state`` may be an
+    ``eval_shape`` pytree and ``mesh`` a shape-only stand-in; no devices or
+    arrays needed)."""
+    from ..launch.sharding import _path_str
+
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    return [(_path_str(path), tuple(leaf.shape),
+             _pool_leaf_spec(mesh, path, leaf)) for path, leaf in leaves]
+
+
 def place_decode_state(mesh, state):
     """Device-put the decode state under a mesh: pool/ring kv-head dims
     shard over ``"model"`` when divisible, block tables and everything else
     replicate (each model shard reads the same table, gathers its own head
     shard)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    if "model" not in mesh.axis_names:
-        return jax.tree.map(
-            lambda l: jax.device_put(l, NamedSharding(mesh, P())), state)
-    m = mesh.shape["model"]
+    from jax.sharding import NamedSharding
 
     def place(path, leaf):
-        last = path[-1]
-        name = str(getattr(last, "name", getattr(last, "key", "")))
-        if name in ("k", "v") and leaf.ndim >= 4 and leaf.shape[-2] % m == 0:
-            spec = P(*([None] * (leaf.ndim - 2)), "model", None)
-        else:
-            spec = P()
-        return jax.device_put(leaf, NamedSharding(mesh, spec))
+        return jax.device_put(
+            leaf, NamedSharding(mesh, _pool_leaf_spec(mesh, path, leaf)))
 
     return jax.tree_util.tree_map_with_path(place, state)

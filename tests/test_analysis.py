@@ -8,6 +8,9 @@ registry, and the retrace probes.
 import json
 import textwrap
 
+import jax
+import pytest
+
 from repro.analysis import findings as F
 from repro.analysis.__main__ import main as cli_main
 from repro.analysis.linter import apply_baseline, lint_paths, lint_source
@@ -545,3 +548,439 @@ def test_retrace_grid_rollout():
 
     fails = rollout_retraces()
     assert fails == [], "\n".join(f.render() for f in fails)
+
+
+# ---------------------------------------------------------------------------
+# layer 4: shardcheck -- validate_spec invariants
+# ---------------------------------------------------------------------------
+
+def _mesh(m=4):
+    from repro.analysis.contracts import ShapeOnlyMesh
+    return ShapeOnlyMesh(cells=1, model=m)
+
+
+def test_validate_spec_non_dividing_dim():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import validate_spec
+    errs = validate_spec(_mesh(4), (6, 4), P("model", None))
+    assert len(errs) == 1 and "not divisible" in errs[0]
+    assert validate_spec(_mesh(4), (8, 4), P("model", None)) == []
+
+
+def test_validate_spec_duplicate_axis():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import validate_spec
+    errs = validate_spec(_mesh(2), (8, 4), P("model", "model"))
+    assert any("consumed twice" in e for e in errs)
+
+
+def test_validate_spec_overrank_and_unknown_axis():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import validate_spec
+    errs = validate_spec(_mesh(2), (8,), P(None, None, "model"))
+    assert len(errs) == 1 and "rank-1" in errs[0]
+    errs = validate_spec(_mesh(2), (8,), P("nope"))
+    assert any("unknown mesh axis" in e for e in errs)
+
+
+def test_cache_spec_conv_leaf_is_not_kv():
+    """Regression: "conv" ends with "v" -- a suffix match once handed conv
+    caches the (B, S, KV, hd) KV layout, sharding their batch dim over
+    "model"."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import sharding
+    tree = {"units": {"slot0": {
+        "conv": jax.ShapeDtypeStruct((2, 2, 4, 8), np.float32)}}}
+    ((path, leaf),) = jax.tree_util.tree_flatten_with_path(tree)[0]
+    assert sharding.cache_spec(_mesh(2), path, leaf, batch=2) == P()
+
+
+def test_cache_spec_kv_leaf_shards_kv_heads():
+    import numpy as np
+
+    from repro.analysis.shardcheck import _spec_axes
+    from repro.launch import sharding
+    tree = {"tail": {"blk0": {
+        "k": jax.ShapeDtypeStruct((2, 24, 4, 8), np.float32)}}}
+    ((path, leaf),) = jax.tree_util.tree_flatten_with_path(tree)[0]
+    spec = sharding.cache_spec(_mesh(2), path, leaf, batch=2)
+    assert "model" in _spec_axes(spec)
+
+
+# ---------------------------------------------------------------------------
+# layer 4: shardcheck -- registry pin + seeded violations
+# ---------------------------------------------------------------------------
+
+def test_shardcheck_full_registry_clean():
+    from repro.analysis.shardcheck import run_shardcheck
+    from repro.configs import base as config_base
+
+    rep = run_shardcheck()
+    assert rep.ok, "\n".join(f.render() for f in rep.failures)
+    covered = set(rep.covered)
+    for arch in config_base.load_all():
+        for check in ("spec", "batch", "cache", "dtype"):
+            assert (arch, check) in covered, f"missing {arch} x {check}"
+    # pool skips are contract-driven (non-plain-decoder stacks), not silent
+    for arch, check, _ in rep.skipped:
+        assert check == "pool"
+        cfg = config_base.get_config(arch)
+        assert cfg.enc_layers or set("xde") & set(cfg.block_pattern)
+    assert ("qwen3-0.6b", "donation") in covered
+    assert ("mec-params", "dtype") in covered
+    assert rep.elapsed_s < 60, "shardcheck must stay CI-cheap"
+
+
+def test_shardcheck_seeded_duplicate_axis_fails(monkeypatch):
+    """A deliberately corrupt param spec (one mesh axis on two dims) must
+    surface as a [shardcheck:spec] failure."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.shardcheck import run_shardcheck
+    from repro.launch import sharding
+
+    real = sharding.param_spec
+
+    def seeded(mesh, cfg, pstr, shape):
+        if len(shape) == 2:
+            return P("model", "model")
+        return real(mesh, cfg, pstr, shape)
+
+    monkeypatch.setattr(sharding, "param_spec", seeded)
+    rep = run_shardcheck(["qwen3-0.6b"], model_degrees=(2,), donation=False)
+    assert not rep.ok
+    assert any(f.check == "spec" and "consumed twice" in f.message
+               for f in rep.failures)
+
+
+def test_cli_shardcheck_gates_on_seeded_violation(monkeypatch):
+    """Acceptance: `python -m repro.analysis --shardcheck` exits nonzero
+    when a spec violation is seeded into the sharding policy."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import shardcheck as SC
+    from repro.configs import base as config_base
+    from repro.launch import sharding
+
+    one = {"qwen3-0.6b": config_base.load_all()["qwen3-0.6b"]}
+    monkeypatch.setattr(SC.config_base, "load_all", lambda: one)
+    real = sharding.param_spec
+
+    def seeded(mesh, cfg, pstr, shape):
+        if len(shape) == 2:
+            return P("model", "model")
+        return real(mesh, cfg, pstr, shape)
+
+    monkeypatch.setattr(sharding, "param_spec", seeded)
+    assert cli_main(["--shardcheck"]) == 1
+    monkeypatch.setattr(sharding, "param_spec", real)
+    assert cli_main(["--shardcheck"]) == 0
+
+
+def test_shardcheck_kv_head_missplit(monkeypatch):
+    """A kv projection spec that divides the FLAT dim but splits heads
+    (qwen3 kv=8, head_dim=128: 1024 % 16 == 0 but 8 % 16 != 0) must fail
+    the head-granularity check; the dividing degree is the near-miss."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.shardcheck import run_shardcheck
+    from repro.launch import sharding
+
+    real = sharding.param_spec
+
+    def seeded(mesh, cfg, pstr, shape):
+        if pstr.rsplit("/", 1)[-1] in ("wk", "wv") and len(shape) >= 2:
+            return P(*[None] * (len(shape) - 1), "model")
+        return real(mesh, cfg, pstr, shape)
+
+    monkeypatch.setattr(sharding, "param_spec", seeded)
+    rep = run_shardcheck(["qwen3-0.6b"], model_degrees=(16,), donation=False)
+    assert any(f.check == "kv-heads" for f in rep.failures), \
+        "\n".join(f.render() for f in rep.failures)
+    # near miss: 8 kv heads over an 8-way model axis is head-granular
+    rep = run_shardcheck(["qwen3-0.6b"], model_degrees=(8,), donation=False)
+    assert not any(f.check == "kv-heads" for f in rep.failures), \
+        "\n".join(f.render() for f in rep.failures)
+
+
+# ---------------------------------------------------------------------------
+# layer 4: dtype-flow + donation probes
+# ---------------------------------------------------------------------------
+
+def test_dtype_failures_flags_f64_and_weak_floats():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.shardcheck import dtype_failures
+    fails = dtype_failures(
+        {"w": jax.ShapeDtypeStruct((2,), np.dtype("float64"))},
+        arch="fx", what="t")
+    assert len(fails) == 1 and "float64" in fails[0].message
+
+    weak = jax.eval_shape(lambda: jnp.asarray(1.0))
+    assert weak.weak_type, "fixture must be weak-typed"
+    fails = dtype_failures({"x": weak}, arch="fx", what="t")
+    assert len(fails) == 1 and "weak-typed" in fails[0].message
+
+    clean = {"a": jax.ShapeDtypeStruct((2,), np.float32),
+             "i": jax.ShapeDtypeStruct((2,), np.int32)}
+    assert dtype_failures(clean, arch="fx", what="t") == []
+
+
+def test_mec_params_dtype_clean():
+    from repro.analysis.shardcheck import mec_params_dtype_failures
+    fails = mec_params_dtype_failures()
+    assert fails == [], "\n".join(f.render() for f in fails)
+
+
+def test_donation_probe_positive_and_near_miss():
+    import jax.numpy as jnp
+
+    from repro.analysis.shardcheck import donation_failures
+    args = ({"s": jnp.zeros(4)}, jnp.ones(4))
+
+    bad = jax.jit(lambda s, x: ({"s": s["s"] + x}, x))
+    fails = donation_failures(bad, args, arch="fx", what="tick")
+    assert len(fails) == 1 and "not donated" in fails[0].message
+
+    good = jax.jit(lambda s, x: ({"s": s["s"] + x}, x), donate_argnums=0)
+    assert donation_failures(good, args, arch="fx", what="tick") == []
+
+    opaque = donation_failures(lambda s, x: (s, x), args,
+                               arch="fx", what="tick")
+    assert len(opaque) == 1 and "not introspectable" in opaque[0].message
+
+
+# ---------------------------------------------------------------------------
+# layer 5: sanitizer -- shadow ownership over a fake paged engine
+# ---------------------------------------------------------------------------
+
+def _fake_paged_engine(slots=2, n_blocks=9, kv_block=8, table_w=4):
+    import types
+
+    import numpy as np
+
+    from repro.analysis.sanitize import KVSanitizer
+    from repro.serving.kvpool import BlockAllocator
+    eng = types.SimpleNamespace(
+        owned=[[] for _ in range(slots)],
+        block_tables=np.zeros((slots, table_w), np.int32),
+        active=[None] * slots,
+        seq_lens=np.zeros(slots, np.int32),
+        kv_block=kv_block,
+        allocator=BlockAllocator(n_blocks, kv_block))
+    return eng, KVSanitizer(eng)
+
+
+def _hand(eng, san, slot, n, seq_len):
+    got = eng.allocator.alloc(n)
+    san.on_alloc(slot, got)
+    eng.owned[slot] = list(got)
+    eng.block_tables[slot, :len(got)] = got
+    eng.active[slot] = object()
+    eng.seq_lens[slot] = seq_len
+    return got
+
+
+def test_sanitizer_clean_lifecycle():
+    eng, san = _fake_paged_engine()
+    got = _hand(eng, san, 0, 2, seq_len=10)
+    san.check_tick()
+    san.on_free(0, got)
+    eng.allocator.free(got)
+    eng.owned[0] = []
+    eng.block_tables[0, :] = 0
+    eng.seq_lens[0] = 0
+    eng.active[0] = None
+    san.check_tick()
+    san.check_drain()
+
+
+def test_sanitizer_catches_double_free():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    eng, san = _fake_paged_engine()
+    got = _hand(eng, san, 0, 1, seq_len=4)
+    san.on_free(0, got)
+    with pytest.raises(SanitizerError, match="double free"):
+        san.on_free(0, got)
+
+
+def test_sanitizer_catches_cross_slot_aliasing_on_alloc():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    eng, san = _fake_paged_engine()
+    got = _hand(eng, san, 0, 1, seq_len=4)
+    with pytest.raises(SanitizerError, match="aliasing"):
+        san.on_alloc(1, [got[0]])
+
+
+def test_sanitizer_catches_dummy_block_handout():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    _, san = _fake_paged_engine()
+    with pytest.raises(SanitizerError, match="dummy block 0"):
+        san.on_alloc(0, [0])
+
+
+def test_sanitizer_tick_catches_aliased_owned_lists():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    eng, san = _fake_paged_engine()
+    got = _hand(eng, san, 0, 1, seq_len=4)
+    eng.owned[1] = [got[0]]
+    eng.block_tables[1, 0] = got[0]
+    eng.active[1] = object()
+    with pytest.raises(SanitizerError, match="aliased"):
+        san.check_tick()
+
+
+def test_sanitizer_tick_catches_stale_table_entry():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    eng, san = _fake_paged_engine()
+    _hand(eng, san, 0, 2, seq_len=10)
+    eng.block_tables[0, 3] = 5          # past the 2 owned blocks
+    with pytest.raises(SanitizerError, match="stale"):
+        san.check_tick()
+
+
+def test_sanitizer_tick_catches_dummy_write():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    eng, san = _fake_paged_engine()
+    _hand(eng, san, 0, 1, seq_len=9)    # 9 > 1 block x 8 tokens
+    with pytest.raises(SanitizerError, match="dummy block 0"):
+        san.check_tick()
+
+
+def test_sanitizer_tick_catches_free_owned_overlap():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    eng, san = _fake_paged_engine()
+    # slot claims a block the allocator never handed out (still free)
+    eng.owned[0] = [3]
+    san.owner[3] = 0
+    eng.block_tables[0, 0] = 3
+    eng.active[0] = object()
+    eng.seq_lens[0] = 4
+    with pytest.raises(SanitizerError, match="free and slot-owned"):
+        san.check_tick()
+
+
+def test_sanitizer_drain_catches_leak():
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    eng, san = _fake_paged_engine()
+    _hand(eng, san, 0, 1, seq_len=4)
+    eng.active[0] = None                # request "completed", blocks kept
+    with pytest.raises(SanitizerError, match="leak at drain"):
+        san.check_drain()
+
+
+# ---------------------------------------------------------------------------
+# layer 5: sanitizer -- real engine (injected aliasing + clean shipping run)
+# ---------------------------------------------------------------------------
+
+def test_sanitized_engine_catches_injected_aliasing():
+    """Acceptance: a sanitized REAL engine whose pool state is corrupted
+    mid-flight (one block reachable from two slots) fails its next tick."""
+    import numpy as np
+    import pytest
+
+    from repro.analysis.sanitize import SanitizerError
+    from repro.configs.base import get_config, reduced
+    from repro.models import transformer
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, slots=2, s_max=32, sanitize=True)
+    eng.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                       max_new=8))
+    assert eng.step()                   # admit + first decode tick, clean
+    (slot,) = [i for i, r in enumerate(eng.active) if r is not None]
+    other = 1 - slot
+    eng.owned[other] = [eng.owned[slot][0]]
+    eng.block_tables[other, 0] = eng.owned[slot][0]
+    with pytest.raises(SanitizerError, match="aliased"):
+        eng.step()
+
+
+@pytest.mark.slow
+def test_run_sanitize_clean_on_shipping_engine():
+    """Acceptance: the flash-crowd sanitize run passes clean AND actually
+    exercises the dry-pool path (preemption fired, blocks churned)."""
+    from repro.analysis.sanitize import run_sanitize
+
+    rep = run_sanitize()
+    assert rep.ok, "\n".join(f.render() for f in rep.failures)
+    assert rep.requests == 10
+    assert rep.preemptions > 0
+    assert rep.block_churn > rep.requests   # growth beyond initial allocs
+
+
+# ---------------------------------------------------------------------------
+# baseline placeholder gate
+# ---------------------------------------------------------------------------
+
+def test_placeholder_entries_detection():
+    base = {
+        "aa": {"fingerprint": "aa", "path": "a.py", "rule": "r",
+               "note": F.PLACEHOLDER_NOTE},
+        "bb": {"fingerprint": "bb", "path": "b.py", "rule": "r",
+               "note": "   "},
+        "cc": {"fingerprint": "cc", "path": "c.py", "rule": "r",
+               "note": "justified: warmup loop reuses the key on purpose"},
+    }
+    stale = F.placeholder_entries(base)
+    assert [e["fingerprint"] for e in stale] == ["aa", "bb"]
+
+
+def test_cli_check_gates_on_placeholder_note(tmp_path, monkeypatch):
+    """--lint tolerates a fresh baseline; --check refuses entries whose
+    note was never justified (heavy layers stubbed out)."""
+    import types
+
+    from repro.analysis import contracts, retrace, sanitize, shardcheck
+
+    clean_sweep = types.SimpleNamespace(covered=(), skipped=(), failures=(),
+                                        elapsed_s=0.0)
+    clean_run = types.SimpleNamespace(failures=(), ticks=1, requests=1,
+                                      preemptions=1, block_churn=1,
+                                      elapsed_s=0.0)
+    monkeypatch.setattr(contracts, "run_contracts", lambda **kw: clean_sweep)
+    monkeypatch.setattr(shardcheck, "run_shardcheck",
+                        lambda **kw: clean_sweep)
+    monkeypatch.setattr(retrace, "run_retrace", lambda **kw: [])
+    monkeypatch.setattr(sanitize, "run_sanitize", lambda **kw: clean_run)
+
+    fx = tmp_path / "fx.py"
+    fx.write_text(textwrap.dedent(KEY_REUSE_POSITIVE))
+    baseline = tmp_path / "baseline.json"
+    assert cli_main(["--write-baseline", "--paths", str(fx),
+                     "--baseline", str(baseline)]) == 0
+    assert cli_main(["--lint", "--paths", str(fx),
+                     "--baseline", str(baseline)]) == 0
+    assert cli_main(["--check", "--paths", str(fx),
+                     "--baseline", str(baseline)]) == 1
+
+    data = json.loads(baseline.read_text())
+    for e in data["findings"]:
+        e["note"] = "fixture reuse is the point of this test file"
+    baseline.write_text(json.dumps(data))
+    assert cli_main(["--check", "--paths", str(fx),
+                     "--baseline", str(baseline)]) == 0

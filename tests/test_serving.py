@@ -394,6 +394,45 @@ def test_kvpool_block_allocator():
     assert blocks_for(9, 4) == 3
 
 
+def test_kvpool_allocator_free_of_never_handed_block():
+    from repro.serving.kvpool import BlockAllocator
+    al = BlockAllocator(8, 4)
+    al.alloc(2)
+    with pytest.raises(ValueError, match="double free"):
+        al.free([6])                    # never allocated: still in the list
+    al._free.remove(6)                  # vanished block: in NEITHER set
+    with pytest.raises(ValueError, match="never handed out"):
+        al.free([6])
+
+
+def test_kvpool_allocator_free_batch_is_atomic():
+    """A bad free() batch must leave the allocator untouched -- a partial
+    free would strand the valid blocks in limbo (neither free nor owned)."""
+    from repro.serving.kvpool import BlockAllocator
+    al = BlockAllocator(8, 4)
+    got = al.alloc(3)
+    n_free, handed = al.n_free, al.handed_out()
+    with pytest.raises(ValueError, match="double free"):
+        al.free([got[0], 6])            # 6 is still free
+    assert al.n_free == n_free and al.handed_out() == handed
+    with pytest.raises(ValueError, match="duplicated within"):
+        al.free([got[1], got[1]])
+    assert al.n_free == n_free and al.handed_out() == handed
+    al.free(got)                        # the clean batch still drains fully
+    assert al.n_free == al.capacity and al.handed_out() == frozenset()
+
+
+def test_kvpool_allocator_corrupted_free_list_rolls_back():
+    from repro.serving.kvpool import BlockAllocator
+    al = BlockAllocator(6, 4)
+    got = al.alloc(2)
+    al._free.appendleft(got[0])         # simulate external corruption
+    before = list(al._free)
+    with pytest.raises(ValueError, match="corrupted"):
+        al.alloc(3)
+    assert list(al._free) == before     # pops rolled back
+
+
 def test_kvpool_rejects_cross_attention_stacks(setup):
     """Cross-attention kinds have no paged path; the engine must reject
     them up front (pointing at the sync compat mode), before touching any
