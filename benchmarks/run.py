@@ -4,11 +4,15 @@ scenario-grid A/B + the roofline table.
 
 Prints ``name,us_per_call,derived`` CSV per experiment, as required, and
 writes the canonical ``BENCH_N.json`` perf-trajectory artifact at the repo
-root (currently ``BENCH_9.json``), which folds together:
+root (currently ``BENCH_10.json``), which folds together:
 
 * ``serving``       -- continuous-vs-sync replay latency, goodput,
                        slot-steps/sec, prefill-compile counts
                        (benchmarks/serving_latency.py, the old BENCH_6 body)
+* ``chunked_prefill`` -- long-prompt flash-crowd A/B: chunked vs
+                       whole-prompt admission, identical tokens asserted,
+                       per-tick wall p50/p99
+                       (benchmarks/serving_latency.chunked_prefill_ab)
 * ``scenario_grid`` -- batched-vs-loop grid rollout throughput + speedup
                        (benchmarks/scenario_grid.bench_payload)
 * ``kernels``       -- the kernel micro-benchmark rows
@@ -34,17 +38,19 @@ def _row(name, us, derived):
 
 def build_bench_payload(*, grid_cells: int = 8, grid_ues: int = 4,
                         grid_steps: int = 24, grid_repeats: int = 2) -> dict:
-    """Measure the four tracked subsystems and assemble the BENCH_9 body."""
+    """Measure the five tracked subsystems and assemble the BENCH_10 body."""
     from . import kernels_micro, scenario_grid, serving_latency
     serving = serving_latency.bench_all()
+    chunked = serving_latency.chunked_prefill_ab()
     kernels = [{"name": name, "us_per_call": round(us, 1), "derived": derived}
                for name, us, derived in kernels_micro.bench_all()]
     grid = scenario_grid.bench_payload(cells=grid_cells, ues=grid_ues,
                                        steps=grid_steps,
                                        repeats=grid_repeats)
     sanitize = serving_latency.sanitize_overhead()
-    return {"bench": 9, "serving": serving, "scenario_grid": grid,
-            "kernels": kernels, "sanitize_overhead": sanitize}
+    return {"bench": 10, "serving": serving, "chunked_prefill": chunked,
+            "scenario_grid": grid, "kernels": kernels,
+            "sanitize_overhead": sanitize}
 
 
 def _emit_bench_rows(payload: dict) -> None:
@@ -53,6 +59,9 @@ def _emit_bench_rows(payload: dict) -> None:
     for k in payload["kernels"]:
         _row(f"kernel[{k['name']}]", k["us_per_call"], k["derived"])
     for name, us, derived in serving_latency.rows(payload["serving"]):
+        _row(name, us, derived)
+    for name, us, derived in serving_latency.chunked_rows(
+            payload["chunked_prefill"]):
         _row(name, us, derived)
     g = payload["scenario_grid"]
     shape = f"{g['config']['cells']}x{g['config']['ues']}"
@@ -68,7 +77,8 @@ def _emit_bench_rows(payload: dict) -> None:
 
 
 def _write_bench_json(payload: dict) -> None:
-    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_9.json")
+    bench_path = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_10.json")
     with open(bench_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     _row("bench_json", 0.0, f"wrote={os.path.normpath(bench_path)}")
@@ -77,7 +87,7 @@ def _write_bench_json(payload: dict) -> None:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json-only", action="store_true",
-                    help="measure and write BENCH_9.json only (skips the "
+                    help="measure and write BENCH_10.json only (skips the "
                          "paper-figure, ablation, and roofline legs)")
     args = ap.parse_args(argv)
 
@@ -127,7 +137,7 @@ def main(argv=None) -> int:
         _row(f"ablation_v[V={r['V']:g}]", (time.time() - t0) * 1e6 / 3,
              f"delay={r['delay_s']:.4f}s;qE={r['q_energy_final']:.1f}")
 
-    # -- kernels + serving A/B + scenario grid -> BENCH_9.json -----------------
+    # -- kernels + serving A/Bs + scenario grid -> BENCH_10.json ---------------
     payload = build_bench_payload()
     _emit_bench_rows(payload)
     _write_bench_json(payload)

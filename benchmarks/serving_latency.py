@@ -21,6 +21,11 @@ schedule -- the engines may only differ in *when*, never *what*).
 CSV rows follow the benchmarks/run.py convention; ``--json`` additionally
 writes the canonical ``BENCH_6.json`` perf-trajectory artifact with both
 engines' numbers per workload.
+
+``chunked_prefill_ab`` is the second A/B: chunked vs whole-prompt
+admission under a long-prompt flash crowd, gated (in ``main`` and CI) on
+identical tokens AND a per-tick wall-p99 win for chunking -- the
+head-of-line-blocking fix this benchmark exists to keep honest.
 """
 from __future__ import annotations
 
@@ -196,6 +201,101 @@ def sanitize_overhead(*, slots: int = 2, s_max: int = 32, seed: int = 0,
     }
 
 
+def chunked_prefill_ab(*, slots: int = 2, s_max: int = 128, seed: int = 0,
+                       n_layers: int = 2, chunk: int = 32,
+                       n_long: int = 4, n_short: int = 6) -> dict:
+    """Head-of-line-blocking A/B: a flash crowd of LONG prompts replayed
+    through chunked-prefill admission (``prefill_chunk=chunk``) vs
+    whole-prompt admission (``prefill_chunk=None``) at equal geometry.
+
+    Whole-prompt admission spends one monolithic tick per long prompt, so
+    every already-decoding slot stalls for the full prompt width -- the
+    per-tick wall p99 carries that spike.  Chunked admission bounds any
+    tick's prefill work to one chunk.  Each mode runs a warm-up wave
+    first (every program compiles), then an identical measured wave on
+    the SAME engine instance; per-request greedy tokens are asserted
+    identical across modes, warm and measured alike -- chunking may only
+    change *when*, never *what*.
+    """
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import transformer
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=n_layers)
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    spec = [(0, rng.integers(0, cfg.vocab,
+                             int(rng.integers(88, 101))).astype(np.int32),
+             int(rng.integers(3, 6))) for _ in range(n_long)]
+    spec += [(int(rng.integers(0, 4)),
+              rng.integers(0, cfg.vocab,
+                           int(rng.integers(5, 12))).astype(np.int32),
+              int(rng.integers(3, 8))) for _ in range(n_short)]
+    spec.sort(key=lambda s: s[0])
+
+    def wave(eng, base_rid):
+        t_base = eng.clock
+        reqs = [Request(rid=base_rid + i, prompt=p, max_new=m)
+                for i, (_, p, m) in enumerate(spec)]
+        i, durs = 0, []
+        for _ in range(5000):
+            while i < len(reqs) and spec[i][0] + t_base <= eng.clock:
+                eng.submit(reqs[i])
+                i += 1
+            t0 = time.perf_counter()
+            busy = eng.step()
+            durs.append(time.perf_counter() - t0)
+            if i == len(reqs) and not busy:
+                break
+        assert all(r.done for r in reqs), "wave did not drain"
+        eng.pop_completed()
+        return durs, [list(r.out) for r in reqs]
+
+    results = {}
+    for label, pc in (("chunked", chunk), ("whole", None)):
+        eng = ServingEngine(cfg, params, slots=slots, s_max=s_max,
+                            prefill_chunk=pc)
+        _, warm_out = wave(eng, 0)           # compiles every program
+        durs, out = wave(eng, 10_000)        # steady state, measured
+        assert out == warm_out, f"{label}: warm/measured token mismatch"
+        results[label] = {
+            "p50_tick_us": round(float(np.percentile(durs, 50)) * 1e6, 1),
+            "p99_tick_us": round(float(np.percentile(durs, 99)) * 1e6, 1),
+            "max_tick_us": round(float(np.max(durs)) * 1e6, 1),
+            "ticks": len(durs),
+            "prefill_compiles": int(eng.prefill_compiles),
+            "_outputs": out,
+        }
+    match = (results["chunked"].pop("_outputs")
+             == results["whole"].pop("_outputs"))
+    return {
+        "config": {"arch": cfg.name, "n_layers": n_layers, "slots": slots,
+                   "s_max": s_max, "chunk": chunk, "n_long": n_long,
+                   "n_short": n_short, "seed": seed},
+        "chunked": results["chunked"],
+        "whole": results["whole"],
+        "outputs_match": bool(match),
+        "p99_tick_speedup": round(
+            results["whole"]["p99_tick_us"]
+            / max(results["chunked"]["p99_tick_us"], 1e-9), 3),
+    }
+
+
+def chunked_rows(payload: dict):
+    """benchmarks/run.py CSV rows for the chunked-prefill A/B payload."""
+    for mode in ("chunked", "whole"):
+        r = payload[mode]
+        yield (f"chunked_prefill[{mode}]", r["p50_tick_us"],
+               f"p99_tick_us={r['p99_tick_us']:.0f};"
+               f"max_tick_us={r['max_tick_us']:.0f};"
+               f"ticks={r['ticks']};"
+               f"prefill_compiles={r['prefill_compiles']}")
+    yield ("chunked_prefill_ab", 0.0,
+           f"p99_tick_speedup={payload['p99_tick_speedup']:.2f}x;"
+           f"outputs_match={'OK' if payload['outputs_match'] else 'FAIL'}")
+
+
 def rows(payload: dict):
     """Flatten the payload into benchmarks/run.py CSV rows."""
     for workload, w in payload["workloads"].items():
@@ -227,10 +327,14 @@ def main(argv=None) -> int:
 
     payload = bench_all(slots=args.slots, s_max=args.s_max, ticks=args.ticks,
                         n_ue=args.ues, seed=args.seed)
+    chunked = chunked_prefill_ab(slots=args.slots, seed=args.seed)
     print("name,us_per_call,derived")
     for name, us, derived in rows(payload):
         print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in chunked_rows(chunked):
+        print(f"{name},{us:.1f},{derived}")
     if args.json:
+        payload = dict(payload, chunked_prefill=chunked)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
         print(f"wrote {args.json}")
@@ -238,12 +342,19 @@ def main(argv=None) -> int:
     ok = all(w["outputs_match"] for w in payload["workloads"].values())
     crowd = payload["workloads"]["flash_crowd"]
     improved = crowd["p99_speedup"] > 1.0
+    chunk_ok = chunked["outputs_match"]
+    chunk_improved = chunked["p99_tick_speedup"] > 1.0
     if not ok:
         print("PARITY FAILURE: engines produced different tokens")
     if not improved:
         print("LATENCY REGRESSION: continuous p99 not better than sync "
               "on flash_crowd")
-    return 0 if ok and improved else 1
+    if not chunk_ok:
+        print("PARITY FAILURE: chunked prefill produced different tokens")
+    if not chunk_improved:
+        print("LATENCY REGRESSION: chunked prefill did not improve the "
+              "per-tick wall p99 on the long-prompt flash crowd")
+    return 0 if ok and improved and chunk_ok and chunk_improved else 1
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 """Layer 2: abstract-interpretation contract harness.
 
 ``jax.eval_shape`` traces every registered arch config through every
-serving path -- prefill, decode, paged decode, ragged prefill+decode --
-without allocating a single parameter or running any numerics, so the
-whole registry's shape/dtype contracts check in seconds on CPU.  A fifth
-leg sweeps the tensor-parallel ``param_spec`` policy over model degrees
+serving path -- prefill, decode, paged decode, ragged prefill+decode,
+chunked prefill (the streaming-admission step + its incremental pool
+commit) -- without allocating a single parameter or running any numerics,
+so the whole registry's shape/dtype contracts check in seconds on CPU.  A
+further leg sweeps the tensor-parallel ``param_spec`` policy over degrees
 {1, 2, 4, 8} on a shape-only stand-in mesh and verifies every sharded
 dimension actually divides (the head-splitting bug class PR 5 fixed).
 
@@ -25,7 +26,7 @@ import jax.numpy as jnp
 
 from ..configs import base as config_base
 
-PATHS = ("prefill", "decode", "paged", "ragged", "pspec")
+PATHS = ("prefill", "decode", "paged", "ragged", "chunked", "pspec")
 MODEL_DEGREES = (1, 2, 4, 8)
 
 _B, _S, _SMAX = 2, 24, 48              # batch, prompt width, cache budget
@@ -129,7 +130,9 @@ def _check_model_paths(cfg, params, failures: list) -> list[str]:
     try:
         kvpool._check_pattern(cfg)
     except ValueError as e:
-        skips.append(("paged", str(e).split(";")[0]))
+        reason = str(e).split(";")[0]
+        skips.append(("paged", reason))
+        skips.append(("chunked", reason))
         return skips
     n_blocks = _SLOTS * (_SMAX // _BLOCK) + 1
     state = jax.eval_shape(
@@ -163,6 +166,34 @@ def _check_model_paths(cfg, params, failures: list) -> list[str]:
     if jax.tree.structure(committed) != jax.tree.structure(state):
         failures.append(ContractFailure(
             arch, "paged", "commit_prefill changed the pool-state treedef"))
+
+    # -- chunked prefill (streaming admission) -----------------------------
+    # traced-scalar start/n_valid: the engine compiles ONE chunk-step and
+    # ONE chunk-commit program regardless of the chunk index
+    if "m" in (*cfg.block_pattern, *cfg.tail_pattern):
+        skips.append(("chunked", "MoE capacity routing couples tokens "
+                                 "across a dispatch group; the engine falls "
+                                 "back to whole-prompt prefill"))
+        return skips
+    chunk_toks = _sds((1, _BLOCK), jnp.int32)
+    logits_c, cache_c = jax.eval_shape(
+        lambda p, cc, t, s, nv: transformer.prefill_chunk(p, cfg, cc, t,
+                                                          s, nv),
+        params, solo_core, chunk_toks, scalar, scalar)
+    _expect_logits(logits_c, 1, cfg.vocab, arch, "chunked", failures)
+    if jax.tree.structure(cache_c) != jax.tree.structure(solo_core):
+        failures.append(ContractFailure(
+            arch, "chunked", "prefill_chunk changed the stream-cache "
+                             "treedef (the engine threads it chunk to "
+                             "chunk)"))
+    ids_full = _sds((-(-_SMAX // _BLOCK),), jnp.int32)
+    committed_c = jax.eval_shape(
+        lambda st, so, s, nv, sl, bi: kvpool.commit_chunk(
+            st, so, s, nv, sl, bi, block_size=_BLOCK),
+        state, solo_core, scalar, scalar, scalar, ids_full)
+    if jax.tree.structure(committed_c) != jax.tree.structure(state):
+        failures.append(ContractFailure(
+            arch, "chunked", "commit_chunk changed the pool-state treedef"))
     return skips
 
 
@@ -210,7 +241,8 @@ def run_contracts(arch_names=None, *, verbose: bool = False) -> ContractReport:
             skips = []
         skip_paths = {p for p, _ in skips}
         covered.extend((name, p) for p in ("prefill", "decode", "ragged"))
-        covered.extend((name, p) for p in ("paged",) if p not in skip_paths)
+        covered.extend((name, p) for p in ("paged", "chunked")
+                       if p not in skip_paths)
         skipped.extend((name, p, why) for p, why in skips)
         try:
             _check_pspecs(cfg, params, failures)

@@ -1,7 +1,7 @@
 """Retrace counter: assert steady-state programs compile a bounded number
 of times.
 
-Two probes, both on smoke-size configs so the whole check stays
+Three probes, all on smoke-size configs so the whole check stays
 CPU-cheap:
 
 * **Serving**: drive a continuous-batching :class:`ServingEngine` through
@@ -9,6 +9,12 @@ CPU-cheap:
   per touched bucket, one paged decode, one commit per bucket); wave two
   must compile NOTHING -- ``prefill_compiles`` stays flat and the paged
   decode jit cache stays at one entry.
+
+* **Chunked prefill**: the same engine shape with a small
+  ``prefill_chunk`` and prompts long enough to stream.  The chunk index
+  rides as a TRACED scalar, so the chunk-step and chunk-commit jits must
+  each hold exactly ONE compiled program no matter how many chunks or
+  prompt lengths the waves push through.
 
 * **ScenarioGrid rollouts**: a jitted ``make_rollout`` program invoked
   with three different keys must hold exactly one cache entry (keys are
@@ -91,6 +97,47 @@ def serving_retraces(arch: str = "qwen3-0.6b") -> list[RetraceFailure]:
     return failures
 
 
+def chunked_retraces(arch: str = "qwen3-0.6b") -> list[RetraceFailure]:
+    from ..configs.base import get_config, reduced
+    from ..models import transformer
+    from ..serving.engine import Request, ServingEngine
+
+    failures: list[RetraceFailure] = []
+    cfg = reduced(get_config(arch))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, slots=2, s_max=64, prefill_chunk=16)
+    rng = np.random.default_rng(1)
+
+    def wave(lengths, base_rid):
+        for i, n in enumerate(lengths):
+            eng.submit(Request(
+                rid=base_rid + i,
+                prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                max_new=4))
+        eng.run_until_idle()
+
+    wave([40, 20, 7], 0)                 # 40 and 20 stream; 7 prefills whole
+    first = eng.prefill_compiles
+    wave([45, 18, 6], 100)               # new lengths, same programs
+    if eng.prefill_compiles != first:
+        failures.append(RetraceFailure(
+            "chunked", f"steady state recompiled prefill: {first} -> "
+                       f"{eng.prefill_compiles} signatures on identical "
+                       f"chunk/bucket shapes"))
+    for name in ("_chunk_step", "_commit_chunk"):
+        size = _cache_size(getattr(eng, name))
+        if size is None:
+            failures.append(RetraceFailure(
+                "chunked", f"jit cache introspection unavailable for "
+                           f"{name} (jax dropped _cache_size?)"))
+        elif size != 1:
+            failures.append(RetraceFailure(
+                "chunked", f"{name} holds {size} compiled programs; the "
+                           f"traced chunk cursor must keep it at exactly "
+                           f"1"))
+    return failures
+
+
 def rollout_retraces() -> list[RetraceFailure]:
     from ..core.scenarios import grid_from_names
 
@@ -116,4 +163,4 @@ def rollout_retraces() -> list[RetraceFailure]:
 
 
 def run_retrace() -> list[RetraceFailure]:
-    return serving_retraces() + rollout_retraces()
+    return serving_retraces() + chunked_retraces() + rollout_retraces()

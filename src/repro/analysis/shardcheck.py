@@ -365,6 +365,15 @@ def _check_donation(arch: str = "qwen3-0.6b") -> list[ShardFailure]:
         eng._commit,
         (eng._pool_state, solo, jnp.int32(pad), jnp.int32(0), ids),
         arch=cfg.name, what="commit_prefill admission bridge")
+    # chunked-prefill commit: same contract (auto chunking is off at this
+    # s_max, so ask for it explicitly)
+    eng_c = ServingEngine(cfg, params, slots=2, s_max=32, prefill_chunk=8)
+    ids_full = jnp.zeros((eng_c.table_width,), jnp.int32)
+    failures += donation_failures(
+        eng_c._commit_chunk,
+        (eng_c._pool_state, solo, jnp.int32(0), jnp.int32(5), jnp.int32(0),
+         ids_full),
+        arch=cfg.name, what="commit_chunk streaming bridge")
     return failures
 
 

@@ -88,6 +88,23 @@ def decode_attention(q, k, v, valid_mask):
     return ref.decode_attention_ref(q, k, v, valid_mask=valid_mask)
 
 
+def chunk_attention(q, k, v, *, start):
+    """Chunked-prefill GQA attention: q (B,C,H,hd) carries the C tokens at
+    absolute positions ``start .. start+C-1``; k/v (B,S,KV,hd) are dense
+    scratch caches whose entries below ``start+C`` are real (everything
+    beyond is junk that the prefix-causal mask zeroes out).  Query row ``i``
+    attends key position ``j`` iff ``j <= start + i``.
+
+    ``start`` may be traced -- the chunk engine compiles ONE program for
+    all chunk indices.  Scores are chunk x s_max (small), so both dispatch
+    arms run the dense reference; a flash chunk kernel is a follow-on once
+    real-TPU baselines exist.
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    mask = jnp.arange(sk)[None, :] <= (start + jnp.arange(sq))[:, None]
+    return ref.attention_ref(q, k, v, mask=mask)
+
+
 def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int, reset=None):
     """Mamba2 SSD. x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,G,N).
     ``reset`` (B,S) bool zeroes the carried state entering flagged steps

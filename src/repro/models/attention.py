@@ -198,6 +198,35 @@ def decode_self_attention(p, cfg, x, cache, pos, *, kind: str, pad=None):
     return out @ p["wo"], new_cache
 
 
+def chunk_self_attention(p, cfg, x, cache: KVCache, start, positions):
+    """Resumable chunked prefill for global attention: x (B, C, D) holds the
+    chunk's C tokens at absolute positions ``positions = start + arange(C)``;
+    ``cache`` is a dense (B, S_max, KV, hd) scratch already holding the first
+    ``start`` tokens' K/V.  Writes the chunk's K/V at ``start`` and attends
+    with the prefix-causal mask (see :func:`ops.chunk_attention`), so the
+    result for every valid row matches the whole-prompt prefill exactly.
+
+    ``start`` may be traced: one compiled program serves every chunk index.
+    Rows past the prompt's true length (the right-padded final chunk) produce
+    junk outputs and junk scratch entries beyond the prompt -- callers slice
+    logits at the last valid row and never commit positions >= the prompt
+    length (``kvpool.commit_chunk``).
+    """
+    from ..kernels import ops
+    q = _project_q(p, cfg, x)               # (B, C, H, hd)
+    k_new, v_new = _project_kv(p, cfg, x)   # (B, C, KV, hd)
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), start, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), start, 1)
+    out = ops.chunk_attention(q, k, v, start=start)
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"], KVCache(k=k, v=v)
+
+
 def decode_self_attention_paged(p, cfg, x, cache, *, kind: str,
                                 block_table, seq_lens):
     """Single-token decode against per-slot caches (continuous batching).

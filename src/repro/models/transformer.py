@@ -408,6 +408,119 @@ def decode_step(params, cfg, caches, tokens):
     return logits, new_caches
 
 
+def _layer_chunk(p, cfg, kind, x, cache, start, positions, ok):
+    """One layer over a prefill chunk.  x (1, C, D) holds the chunk's tokens
+    at absolute positions ``positions = start + arange(C)``; ``ok`` (C,) bool
+    marks real (non-right-pad) tokens of the final partial chunk.
+
+    Attention kinds ("g"/"m") run chunk-parallel against the dense scratch
+    cache; stateful kinds ("l"/"r"/"s") scan the EXISTING single-token decode
+    step across the chunk -- zero new recurrence math -- selecting the old
+    cache carry on junk steps so right-pad never advances state.  Junk rows'
+    activations are garbage by construction; callers slice the last valid
+    row only.  Returns (x, new_cache).
+    """
+    def masked(step):
+        # scan one decode-form step per chunk token; junk steps keep the
+        # incoming cache so the final partial chunk is exact
+        def body(c, inp):
+            xt, pos_t, ok_t = inp
+            y, new_c = step(xt[:, None, :], c, pos_t)
+            new_c = jax.tree.map(lambda a, b: jnp.where(ok_t, a, b),
+                                 new_c, c)
+            return new_c, y[:, 0]
+        return body
+
+    if kind == "s":
+        body = masked(lambda xt, c, _:
+                      ssm_mod.apply_ssm_decode(p["ssm"], cfg, xt, c))
+        cache, ys = jax.lax.scan(body, cache,
+                                 (jnp.swapaxes(x, 0, 1), positions, ok))
+        return x + jnp.swapaxes(ys, 0, 1), cache
+    if kind == "r":
+        normed = rms_norm(x, p["norm1"])
+        body = masked(lambda xt, c, _:
+                      rglru_mod.apply_rglru_decode(p["rglru"], cfg, xt, c))
+        cache, hs = jax.lax.scan(body, cache,
+                                 (jnp.swapaxes(normed, 0, 1), positions, ok))
+        x = x + jnp.swapaxes(hs, 0, 1)
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        return x, cache
+    if kind == "l":
+        normed = rms_norm(x, p["norm1"])
+        body = masked(lambda xt, c, pos_t: attn.decode_self_attention(
+            p["attn"], cfg, xt, c, pos_t, kind="l"))
+        cache, outs = jax.lax.scan(body, cache,
+                                   (jnp.swapaxes(normed, 0, 1), positions, ok))
+        x = x + jnp.swapaxes(outs, 0, 1)
+        x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+        return x, cache
+    if kind != "g":
+        # "m" is deliberately excluded: capacity-based MoE routing couples
+        # every token in a dispatch group (cumsum capacity contention), so
+        # a chunk-local pass cannot reproduce the whole-prompt dispatch
+        # exactly -- the engine keeps whole-prompt prefill for MoE stacks
+        # (ServingEngine disables prefill_chunk when the pattern has "m").
+        # "x"/"d"/"e" are not continuously servable at all
+        # (kvpool._check_pattern).
+        raise NotImplementedError(
+            f"chunked prefill does not serve kind {kind!r}")
+
+    normed = rms_norm(x, p["norm1"])
+    out, cache = attn.chunk_self_attention(p["attn"], cfg, normed, cache,
+                                           start, positions)
+    x = x + out
+    x = x + ffn_mod.apply_ffn(p["ffn"], cfg, rms_norm(x, p["norm2"]))
+    return x, cache
+
+
+def prefill_chunk(params, cfg, caches, tokens, start, n_valid):
+    """Advance a resumable chunked prefill by one chunk.
+
+    ``caches`` is the {"units", "tail"} core of a batch-1 :func:`prefill`
+    cache holding the first ``start`` prompt tokens (chunk 1 IS a plain
+    ``prefill`` at the chunk width -- its KV scratch is already sized
+    ``s_max``); ``tokens`` (1, C) carries the next chunk, right-padded past
+    ``n_valid`` on the final partial chunk.  ``start`` and ``n_valid`` may be
+    traced: the serving engine compiles ONE chunk program per chunk width.
+
+    Returns (logits (1, V) of token ``start + n_valid - 1``, new caches with
+    the same treedef) -- on the final chunk those logits ARE the whole-prompt
+    prefill logits, exactly (attention kinds recompute the identical
+    prefix-causal softmax; stateful kinds replay the decode-form recurrence).
+
+    Named ``repro.prefill_chunk`` for profiler dumps (pairs with the host
+    "prefill" span the serving telemetry records per chunk).
+    """
+    with jax.named_scope("repro.prefill_chunk"):
+        c = tokens.shape[1]
+        x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+        positions = start + jnp.arange(c)
+        ok = jnp.arange(c) < n_valid
+
+        def scan_body(x, inp):
+            unit_p, unit_c = inp
+            new_c = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, cc = _layer_chunk(unit_p[f"slot{i}"], cfg, kind, x,
+                                     unit_c[f"slot{i}"], start, positions, ok)
+                new_c[f"slot{i}"] = cc
+            return x, new_c
+
+        x, new_unit_caches = jax.lax.scan(
+            scan_body, x, (params["units"], caches["units"]))
+
+        new_tail = []
+        for tp, kind, tc in zip(params.get("tail", []), cfg.tail_pattern,
+                                caches["tail"]):
+            x, cc = _layer_chunk(tp, cfg, kind, x, tc, start, positions, ok)
+            new_tail.append(cc)
+
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = _logits(params, cfg, last)[:, 0]
+        return logits, {"units": new_unit_caches, "tail": new_tail}
+
+
 def _layer_decode_paged(p, cfg, kind, x, cache, block_table, seq_lens):
     """Single-token layer step with per-slot cache positions.  Recurrent
     kinds keep per-row O(1) state, so they are position-free and reuse the

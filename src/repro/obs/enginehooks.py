@@ -54,6 +54,10 @@ class EngineHooks:
         self.tokens = m.counter(
             "serving_tokens_total", "tokens delivered by completed requests",
             **lbl)
+        self.chunk_steps = m.counter(
+            "serving_prefill_chunks_total",
+            "chunked-prefill chunk dispatches (whole-prompt prefills do "
+            "not count here)", **lbl)
         self.block_grows = m.counter(
             "kvpool_block_grows_total",
             "KV blocks appended to active slots mid-decode", **lbl)
@@ -122,6 +126,13 @@ class EngineHooks:
         self.wait_hist.observe(max(tick - enq - 1, 0))
         self.tracer.instant("admit", cat="lifecycle", rid=req.rid)
 
+    def on_prefill_done(self, rid: int, tick: int) -> None:
+        """Prompt fully prefilled, first token sampled.  Same tick as the
+        admit for whole-prompt prefill; the close of the multi-tick
+        admit..done window for chunked prefill (breakdown.py's prefill
+        stage)."""
+        self.tracer.instant("prefill_done", cat="lifecycle", rid=rid)
+
     def on_preempt(self, req, tick: int) -> None:
         self.preempted.inc()
         self._enqueue_tick[req.rid] = tick
@@ -146,13 +157,18 @@ class EngineHooks:
     # -- per-tick sampling (reprolint host-sync hot zones) -------------------
 
     def on_prefill(self, engine, t0_us: float, *, batch: int,
-                   width: int) -> None:
+                   width: int, chunked: bool = False) -> None:
         """After a prefill dispatch + its sanctioned int sync: span + wall
-        histogram + compile-count gauge (host-side jit introspection)."""
+        histogram + compile-count gauge (host-side jit introspection).
+        ``chunked=True`` marks one chunk dispatch of a streaming prefill
+        (width == the chunk size, not the prompt)."""
         t1 = self.tracer.now_us()
         self.prefill_hist.observe((t1 - t0_us) / 1e6)
         self.prefill_compiles.set(engine.prefill_compiles)
-        self.tracer.complete("prefill", t0_us, t1, batch=batch, width=width)
+        if chunked:
+            self.chunk_steps.inc()
+        self.tracer.complete("prefill", t0_us, t1, batch=batch, width=width,
+                             chunked=chunked)
 
     def on_decode_tick(self, engine, t0_us: float, live: int) -> None:
         """After a decode dispatch + its sanctioned (slots,) int sync.

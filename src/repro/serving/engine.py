@@ -32,9 +32,22 @@ Prefill shapes are BUCKETED: prompts pad up to the next power-of-two width
 (``prefill_buckets``), so the jitted prefill compiles once per bucket --
 steady-state serving triggers no recompiles regardless of prompt-length mix
 (pinned by tests/test_serving.py::test_prefill_bucketing_avoids_recompiles).
-Bucket selection never eats the decode budget (``bucket + max_new <=
+Bucket selection never eats the decode budget (``bucket + max_new - 1 <=
 s_max``; see ``_bucket_width``).  Pad-free prompts skip the mask entirely
 and keep the dense/Pallas kernel prefill path.
+
+Long prompts prefill in CHUNKS (``prefill_chunk``; "auto" picks 32 when
+``s_max`` allows): instead of stalling every decoding slot for one full
+bucket-width prefill, admission streams the head request through
+``transformer.prefill_chunk`` one chunk per tick, committing each chunk
+incrementally into the slot's blocks (``kvpool.commit_chunk``) while the
+other slots keep decoding -- decode-tick latency stays bounded by one chunk
+regardless of prompt length.  At most one request streams at a time
+(admission order is still strict FIFO), a mid-prefill slot can be preempted
+like any other (the stream restarts from chunk 1 on re-admission), and the
+final chunk's logits equal the whole-prompt prefill logits exactly, so
+chunked == whole-prompt == solo greedy tokens on every servable stack kind
+(tests/test_serving.py, tests/test_model_axis.py).
 
 A traffic recorder (duck-typed; see ``repro.traffic.recorder``) can observe
 the request lifecycle: the engine reports submit/admit/complete in units of
@@ -122,7 +135,7 @@ class ServingEngine:
                  prefill_buckets=None, recorder=None, mesh=None,
                  sync_batching: bool = False, kv_block: int = 16,
                  kv_blocks: int | None = None, telemetry=None,
-                 sanitize: bool = False):
+                 sanitize: bool = False, prefill_chunk="auto"):
         self.mesh = mesh
         if mesh is not None:
             from ..launch.sharding import place_params
@@ -137,6 +150,24 @@ class ServingEngine:
         if not self.prefill_buckets or self.prefill_buckets[-1] > s_max:
             raise ValueError(f"prefill buckets {self.prefill_buckets} must be "
                              f"non-empty and <= s_max={s_max}")
+        # chunked prefill (continuous mode): prompts LONGER than this stream
+        # through admission one chunk per tick instead of whole-prompt
+        # prefilling in a single tick ("auto": 32 when s_max allows, else
+        # off; None disables).  Sync mode ignores it (the compat engine IS
+        # the head-of-line baseline).
+        if prefill_chunk == "auto":
+            prefill_chunk = 32 if s_max > 32 else None
+        if prefill_chunk is not None and not 0 < int(prefill_chunk) <= s_max:
+            raise ValueError(f"prefill_chunk={prefill_chunk} must be in "
+                             f"[1, s_max={s_max}], None, or 'auto'")
+        if "m" in (*cfg.block_pattern, *cfg.tail_pattern):
+            # capacity-based MoE routing couples every token in a dispatch
+            # group, so chunk-local prefill cannot match the whole-prompt
+            # dispatch exactly -- MoE stacks keep whole-prompt prefill
+            # (see transformer._layer_chunk)
+            prefill_chunk = None
+        self.prefill_chunk = None if prefill_chunk is None \
+            else int(prefill_chunk)
         self.recorder = recorder
         self.clock = 0                       # engine ticks (step() calls)
         self.queue: deque[Request] = deque()
@@ -226,6 +257,27 @@ class ServingEngine:
                 transformer.decode_step_paged(params, cfg, state, toks,
                                               table, lens)),
             donate=0)
+        # -- chunked-prefill stream state: at most ONE request mid-prefill
+        # (see _start_stream / _advance_stream).  Both chunk programs take
+        # traced scalars and a full table-width id row, so each compiles
+        # exactly ONCE regardless of prompt length or chunk index
+        # (analysis.retrace pins it).
+        self._stream_req: Request | None = None
+        self._stream_slot = -1
+        self._stream_cache = None            # device {units, tail} scratch
+        self._stream_done = 0                # prompt tokens advanced so far
+        self._stream_ids = None              # device (table_width,) block row
+        if self.prefill_chunk is not None:
+            self._chunk_step = _jit(
+                lambda cache, toks, start, n_valid: greedy(
+                    transformer.prefill_chunk(params, cfg, cache, toks,
+                                              start, n_valid)),
+                donate=0)
+            self._commit_chunk = _jit(
+                lambda state, solo, start, n_new, slot, ids:
+                    kvpool.commit_chunk(state, solo, start, n_new, slot,
+                                        ids, block_size=kv_block),
+                donate=0)
         if sanitize:
             from ..analysis.sanitize import KVSanitizer
             self._san = KVSanitizer(self)
@@ -241,6 +293,16 @@ class ServingEngine:
             raise ValueError(f"request {req.rid}: ue must be >= 0, got "
                              f"{req.ue} (negative UEs would fold into valid "
                              f"trace columns)")
+        # Budget check up front: the prompt plus max_new - 1 decode writes
+        # (the first token comes from the prefill logits) must fit s_max.
+        # Rejecting HERE -- not mid-admission, after blocks were allocated
+        # and the request popped -- is what keeps an oversized request from
+        # leaking KV blocks and vanishing from the queue.
+        n = len(req.prompt)
+        if n + max(req.max_new, 1) - 1 > self.s_max:
+            raise ValueError(
+                f"request {req.rid}: prompt width {n} + decode budget "
+                f"{req.max_new} exceeds s_max={self.s_max}")
         self.queue.append(req)
         if self.recorder is not None:
             self.recorder.record_submit(req.rid, self.clock, ue=req.ue)
@@ -248,17 +310,18 @@ class ServingEngine:
             self.obs.on_submit(req, self.clock)
 
     def _bucket_width(self, width: int, max_new: int) -> int:
-        """Smallest bucket >= width that still leaves ``max_new`` KV slots.
+        """Smallest bucket >= width that still leaves ``max_new`` tokens.
 
         Bucket slack must never eat the decode budget: prefill starts the
-        cache position at the bucket width, so ``bucket + max_new`` KV slots
-        are written overall and must fit in ``s_max`` (decode's
+        cache position at the bucket width and the first decode token comes
+        from the prefill logits, so ``bucket + max_new - 1`` KV slots are
+        written overall and must fit in ``s_max`` (decode's
         dynamic_update_slice would silently clamp past the end otherwise).
         When every bucket that fits is narrower than needed, fall back to
         the exact width (one extra compiled shape beats corrupt output);
         if even that cannot fit, the request is genuinely oversized.
         """
-        limit = self.s_max - max_new
+        limit = self.s_max - max_new + 1
         if width > limit:
             raise ValueError(
                 f"prompt width {width} + decode budget {max_new} exceeds "
@@ -286,6 +349,7 @@ class ServingEngine:
             self.recorder.record_admit(req.rid, self.clock)
         if self.obs is not None:
             self.obs.on_admit(req, self.clock)
+        self._record_prefill_done(req.rid)
         self._complete(req)
 
     def _solo_prefill(self, req: Request):
@@ -307,10 +371,25 @@ class ServingEngine:
 
     # -- continuous batching ------------------------------------------------
 
+    def _record_prefill_done(self, rid: int):
+        """Duck-typed like the other record_* hooks; older recorders
+        without the method (or recorder=None) are skipped."""
+        rec = getattr(self.recorder, "record_prefill_done", None)
+        if rec is not None:
+            rec(rid, self.clock)
+        if self.obs is not None:
+            self.obs.on_prefill_done(rid, self.clock)
+
     def _admit_continuous(self):
         """Admit from the queue head into free slots, one request per solo
         prefill, until slots or KV blocks run out (FIFO: a request that
-        cannot be placed blocks the ones behind it)."""
+        cannot be placed blocks the ones behind it).  While a chunked
+        prefill is streaming, THIS tick's admission work is the stream's
+        next chunk and nothing else -- strict FIFO, bounded tick cost
+        (see _advance_stream)."""
+        if self._stream_req is not None:
+            self._advance_stream()
+            return
         while self.queue:
             req = self.queue[0]
             n = len(req.prompt)
@@ -341,7 +420,18 @@ class ServingEngine:
                 return                       # pool full: wait for completions
             self.queue.popleft()
             slot = free[0]
-            nxt, cache, pad = self._solo_prefill(req)
+            try:
+                if self.prefill_chunk is not None and n > self.prefill_chunk:
+                    self._start_stream(req, slot, blocks)
+                    return               # one chunk of prefill work per tick
+                nxt, cache, pad = self._solo_prefill(req)
+            except Exception:
+                # belt: submit() validates the budget up front, but any
+                # raise past alloc/popleft must neither leak the blocks nor
+                # silently drop the request
+                self.allocator.free(blocks)
+                self.queue.appendleft(req)
+                raise
             width = len(req.prompt) + pad
             # ids length is the bucket width in blocks: one compile per
             # bucket, exactly like prefill itself
@@ -367,6 +457,88 @@ class ServingEngine:
                 self.recorder.record_admit(req.rid, self.clock)
             if self.obs is not None:
                 self.obs.on_admit(req, self.clock)
+            self._record_prefill_done(req.rid)
+
+    def _start_stream(self, req: Request, slot: int, blocks):
+        """Begin a chunked prefill: run chunk 1 (a plain batch-1 prefill at
+        the chunk width -- its KV scratch is already ``s_max``-sized, so it
+        doubles as the stream's resumable cache) and commit it into the
+        slot's blocks.  The slot is admitted -- it owns its blocks and holds
+        the request -- but stays OUT of the decode dispatch (``seq_lens`` 0
+        plus a dummy-masked table row) until the final chunk lands; see
+        :meth:`_advance_stream`."""
+        c = self.prefill_chunk
+        toks = np.asarray(req.prompt, np.int32)[None, :c]
+        self._prefill_shapes.add((1, c, False))
+        t0 = self.obs.now() if self.obs is not None else 0.0
+        _, cache = self._prefill({"tokens": jnp.asarray(toks)}, None)
+        cache = {"units": cache["units"], "tail": cache["tail"]}
+        if self.obs is not None:
+            self.obs.on_prefill(self, t0, batch=1, width=c, chunked=True)
+        # the FULL table-width id row (slack -> dummy block 0): one
+        # compiled chunk-commit signature for every request shape
+        ids = np.zeros(self.table_width, np.int32)
+        ids[:len(blocks)] = blocks
+        self._stream_ids = jnp.asarray(ids)
+        self._pool_state = self._commit_chunk(
+            self._pool_state, cache, jnp.int32(0), jnp.int32(c),
+            jnp.int32(slot), self._stream_ids)
+        self._stream_req, self._stream_slot = req, slot
+        self._stream_cache, self._stream_done = cache, c
+        self.active[slot] = req
+        self.owned[slot] = list(blocks)
+        self.block_tables[slot, :] = 0
+        self.block_tables[slot, :len(blocks)] = blocks
+        self.seq_lens[slot] = 0
+        self.last_tokens[slot] = 0
+        self.remaining[slot] = req.max_new - 1
+        self._admit_seq[slot] = self._admit_counter
+        self._admit_counter += 1
+        if self._san is not None:
+            self._san.on_alloc(slot, blocks)
+        if self.recorder is not None:
+            self.recorder.record_admit(req.rid, self.clock)
+        if self.obs is not None:
+            self.obs.on_admit(req, self.clock)
+
+    def _advance_stream(self):
+        """One chunk of the streaming request's prefill -- one per tick, so
+        every other slot's decode latency stays bounded by a chunk, never a
+        whole prompt.  Each chunk commits incrementally into the slot's
+        blocks (``kvpool.commit_chunk``); the final chunk's logits ARE the
+        whole-prompt prefill logits, so its argmax is the request's first
+        token and the slot joins THIS tick's decode dispatch, exactly like
+        a whole-prefill admission."""
+        req, slot, c = self._stream_req, self._stream_slot, self.prefill_chunk
+        n = len(req.prompt)
+        start = self._stream_done
+        n_valid = min(c, n - start)
+        chunk = np.zeros((1, c), np.int32)
+        chunk[0, :n_valid] = req.prompt[start:start + n_valid]
+        t0 = self.obs.now() if self.obs is not None else 0.0
+        tok, cache = self._chunk_step(self._stream_cache, jnp.asarray(chunk),
+                                      jnp.int32(start), jnp.int32(n_valid))
+        self._pool_state = self._commit_chunk(
+            self._pool_state, cache, jnp.int32(start), jnp.int32(n_valid),
+            jnp.int32(slot), self._stream_ids)
+        if self.obs is not None:
+            self.obs.on_prefill(self, t0, batch=1, width=c, chunked=True)
+        self._stream_cache = cache
+        self._stream_done = start + n_valid
+        if self._stream_done < n:
+            return
+        # the stream's one sanctioned sync: a single int32 at the final chunk
+        nxt = int(np.asarray(tok)[0])    # reprolint: ignore[host-sync]
+        req.out.append(nxt)
+        self.seq_lens[slot] = n
+        self.last_tokens[slot] = nxt
+        self._end_stream()
+        self._record_prefill_done(req.rid)
+
+    def _end_stream(self):
+        self._stream_req, self._stream_slot = None, -1
+        self._stream_cache, self._stream_done = None, 0
+        self._stream_ids = None
 
     def _release_slot(self, slot: int):
         if self._san is not None:
@@ -386,6 +558,11 @@ class ServingEngine:
         decode is deterministic, so re-admission regenerates the same
         tokens)."""
         req = self.active[slot]
+        if slot == self._stream_slot:
+            # mid-prefill evict: drop the chunk cursor + scratch; the
+            # stream restarts from chunk 1 on re-admission (recompute
+            # preemption, same as a decoding slot)
+            self._end_stream()
         req.out.clear()
         self._release_slot(slot)
         self.queue.appendleft(req)
@@ -433,7 +610,8 @@ class ServingEngine:
     def _step_continuous(self) -> bool:
         self._admit_continuous()
         self._grow_blocks()
-        live = [i for i, r in enumerate(self.active) if r is not None]
+        live = [i for i, r in enumerate(self.active)
+                if r is not None and i != self._stream_slot]
         # per-tick telemetry is SAMPLED by clock stride: even an
         # early-returning method call costs us-scale on the cold post-
         # dispatch path, so the stride check is inline int arithmetic and
@@ -444,11 +622,20 @@ class ServingEngine:
         if sampled:                      # host-state gauges (queue, KV pool)
             obs.sample(self)
         if not live:
-            return bool(self.queue)
+            return self._stream_req is not None or bool(self.queue)
         t0 = obs.now() if sampled else 0.0
+        table = self.block_tables
+        if self._stream_req is not None:
+            # a mid-prefill slot rides the dispatch as an idle row: the
+            # zeroed table row routes its garbage "g" writes to dummy block
+            # 0, and the garbage stepping of its ring/recurrent pool rows is
+            # erased by the next chunk's wholesale commit BEFORE the slot's
+            # first real decode (see kvpool.commit_chunk)
+            table = table.copy()
+            table[self._stream_slot] = 0
         toks, self._pool_state = self._decode_paged(
             self._pool_state, jnp.asarray(self.last_tokens),
-            jnp.asarray(self.block_tables), jnp.asarray(self.seq_lens))
+            jnp.asarray(table), jnp.asarray(self.seq_lens))
         self.decode_steps += 1
         # the tick's one sanctioned sync: (slots,) int32 token ids
         nxt = np.asarray(toks)           # reprolint: ignore[host-sync]
@@ -477,13 +664,28 @@ class ServingEngine:
         A/B baselines and parity tests (``sync_batching=True``)."""
         if any(r is not None for r in self.active) or not self.queue:
             return
+        # Greedy wave build under PER-REQUEST budgets: the shared prefill
+        # width w must cover every prompt AND leave every member its decode
+        # room (w + max_new - 1 <= s_max per request -- row r decodes
+        # max_new - 1 KV writes past the shared width).  Folding the wave's
+        # budgets into one max(prompt) vs max(max_new) pair falsely
+        # rejected individually-valid mixes (a long prompt with a short
+        # budget + a short prompt with a long budget); instead a request
+        # joins the wave only while a feasible width exists, and otherwise
+        # starts the next wave.
         batch = []
+        need, cap = 0, self.s_max + 1
         while self.queue and len(batch) < self.slots:
+            r = self.queue[0]
+            r_need = max(need, len(r.prompt))
+            r_cap = min(cap, self.s_max + 1 - max(r.max_new, 1))
+            if batch and r_need > r_cap:
+                break                        # r starts the next wave
             batch.append(self.queue.popleft())
+            need, cap = r_need, r_cap
         while len(batch) < self.slots:       # pad with a copy (masked out)
             batch.append(Request(rid=-1, prompt=batch[0].prompt, max_new=0))
-        width = self._bucket_width(max(len(r.prompt) for r in batch),
-                                   max(r.max_new for r in batch))
+        width = self._bucket_width(need, self.s_max + 1 - cap)
         toks = np.stack([np.pad(r.prompt, (width - len(r.prompt), 0))
                          for r in batch])    # left-pad to the bucket width
         pad = np.asarray([width - len(r.prompt) for r in batch], np.int32)
@@ -509,6 +711,7 @@ class ServingEngine:
                 self.recorder.record_admit(r.rid, self.clock)
             if self.obs is not None:
                 self.obs.on_admit(r, self.clock)
+            self._record_prefill_done(r.rid)
             if r.max_new > 0:
                 r.out.append(int(nxt[i]))
                 self.remaining[i] -= 1
@@ -582,12 +785,19 @@ class ServingEngine:
         return finished
 
     def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
-        """Step until the queue and all slots drain (or ``max_steps``).
+        """Step until the queue and all slots drain.
 
         Returns every request that completed during (or before, via manual
-        ``step`` calls) this run, in completion order.
+        ``step`` calls) this run, in completion order.  Raises RuntimeError
+        when ``max_steps`` ticks pass with work still pending -- returning
+        partial completions would be indistinguishable from a clean drain
+        (callers that want bounded partial progress should drive ``step()``
+        themselves and ``pop_completed()`` what finished).
         """
         for _ in range(max_steps):
             if not self.step():
-                break
-        return self.pop_completed()
+                return self.pop_completed()
+        raise RuntimeError(
+            f"engine did not drain within max_steps={max_steps}: "
+            f"{len(self.queue)} request(s) still queued, "
+            f"{sum(r is not None for r in self.active)} slot(s) active")

@@ -296,6 +296,76 @@ def commit_prefill(state, solo, pad, slot, block_ids, *, block_size: int):
                                                 is_leaf=_cache_leaf)
 
 
+def commit_chunk(state, solo, chunk_start, n_new, slot, block_ids, *,
+                 block_size: int):
+    """Incremental sibling of :func:`commit_prefill`: commit ONE prefill
+    chunk of a streaming request into the continuous decode state.
+
+    ``solo`` is the batch-1 chunk-stream scratch cache (``transformer.
+    prefill`` at the chunk width, then ``prefill_chunk`` per chunk; no pad
+    -- chunked prompts are never left-padded).  Global-attention K/V rows
+    ``chunk_start .. chunk_start + n_new - 1`` gather out of the dense
+    scratch and scatter into the slot's pool blocks; ring/recurrent rows
+    rewrite WHOLESALE each chunk (they are tiny, and the engine's decode
+    dispatch garbage-steps the streaming slot's rows every tick -- see
+    ``ServingEngine._advance_stream``).  jit-compatible: ``chunk_start`` /
+    ``n_new`` / ``slot`` are traced scalars and ``block_ids`` is the slot's
+    FULL table-width row, so one program serves every chunk of every
+    request.  Junk lanes (past ``n_new``, i.e. the right-padded final
+    chunk) redirect to the reserved dummy block 0.
+    """
+    nb = block_ids.shape[0]
+
+    def insert(path, cont, one):
+        ax = _batch_axis(path)
+        if isinstance(cont, KVCache):
+            chunk = None
+
+            def paged(pool, leaf):
+                nonlocal chunk
+                tok = leaf.shape[ax + 1]
+                if chunk is None:
+                    # lane -> (pool block, offset); junk lanes hit block 0
+                    pos = chunk_start + jnp.arange(tok)
+                    ok = jnp.arange(tok) < n_new
+                    blk = jnp.where(
+                        ok, block_ids[jnp.minimum(pos // block_size, nb - 1)],
+                        0)
+                    chunk = (jnp.minimum(pos, tok - 1), blk, pos % block_size)
+                pos, blk, off = chunk
+                x = jnp.squeeze(leaf, axis=ax)       # (L..., s_max, KV, hd)
+                x = jnp.take(x, pos, axis=ax)
+                if ax:
+                    return pool.at[:, blk, off].set(x)
+                return pool.at[blk, off].set(x)
+            return KVCache(k=paged(cont.k, one.k), v=paged(cont.v, one.v))
+        if isinstance(cont, RingCache):
+            # chunk streams are pad-free: ring slots/positions already
+            # semantic, copy the whole row
+            rk = jnp.squeeze(one.k, axis=ax)
+            rv = jnp.squeeze(one.v, axis=ax)
+            rp = jnp.squeeze(one.pos, axis=ax)
+            if ax:
+                return RingCache(k=cont.k.at[:, slot].set(rk),
+                                 v=cont.v.at[:, slot].set(rv),
+                                 pos=cont.pos.at[:, slot].set(rp))
+            return RingCache(k=cont.k.at[slot].set(rk),
+                             v=cont.v.at[slot].set(rv),
+                             pos=cont.pos.at[slot].set(rp))
+        if isinstance(cont, (SsmCache, RglruCache)):
+            def row(c, o):
+                o = jnp.squeeze(o, axis=ax)
+                if ax:
+                    return c.at[:, slot].set(o)
+                return c.at[slot].set(o)
+            return type(cont)(*[row(c, o) for c, o in zip(cont, one)])
+        raise ValueError(f"unsupported cache node {type(cont)} at {path}")
+
+    with jax.named_scope("repro.commit_chunk"):
+        return jax.tree_util.tree_map_with_path(insert, state, solo,
+                                                is_leaf=_cache_leaf)
+
+
 def _pool_leaf_spec(mesh, path, leaf):
     """Placement policy for one decode-state leaf: pool/ring kv-head dims
     shard over ``"model"`` when divisible, everything else (block-shaped

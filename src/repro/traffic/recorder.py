@@ -6,8 +6,12 @@ loop.  Attach one to a :class:`~repro.serving.engine.ServingEngine`
 its own step clock (one ``step()`` == one tick):
 
 * ``record_submit(rid, t, ue)``   -- request entered the queue;
-* ``record_admit(rid, t)``        -- request prefilled into a decode slot
-  (called again on every re-admission after a preemption);
+* ``record_admit(rid, t)``        -- request entered a decode slot (called
+  again on every re-admission after a preemption);
+* ``record_prefill_done(rid, t)`` -- prompt fully prefilled and first token
+  sampled; same tick as the admit for whole-prompt prefill, later for
+  chunked prefill (the engine probes for it with ``getattr``, so older
+  recorders keep working);
 * ``record_preempt(rid, t)``      -- request evicted back to the queue
   head, output discarded (continuous mode only);
 * ``record_complete(rid, t)``     -- request finished decoding.
@@ -43,7 +47,10 @@ class RequestEvents:
     trace-binning time.  ``admits``/``preempts`` hold EVERY admission /
     preemption tick (a preempted request is re-admitted later, so it can
     have several); ``admit`` exposes the first admission for the common
-    no-preemption case.
+    no-preemption case.  ``prefill_dones`` holds the prefill-completion
+    tick of each admission window that finished its prompt (chunked
+    prefill spends several ticks between admit and done; a preemption
+    mid-prefill leaves that window without a done entry).
     """
 
     rid: int
@@ -52,6 +59,7 @@ class RequestEvents:
     complete: int | None = None
     admits: list[int] = dataclasses.field(default_factory=list)
     preempts: list[int] = dataclasses.field(default_factory=list)
+    prefill_dones: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def admit(self) -> int | None:
@@ -100,6 +108,10 @@ class TrafficRecorder:
 
     def record_preempt(self, rid: int, t: int) -> None:
         self.events.setdefault(rid, RequestEvents(rid=rid)).preempts.append(t)
+
+    def record_prefill_done(self, rid: int, t: int) -> None:
+        self.events.setdefault(rid,
+                               RequestEvents(rid=rid)).prefill_dones.append(t)
 
     def record_complete(self, rid: int, t: int) -> None:
         self.events.setdefault(rid, RequestEvents(rid=rid)).complete = t
@@ -174,7 +186,8 @@ class TrafficRecorder:
         for rid in sorted(self.events):
             ev = self.events[rid]
             b = from_events(rid, ev.submit, ev.admits, ev.preempts,
-                            ev.complete)
+                            ev.complete,
+                            prefill_dones=ev.prefill_dones or None)
             if b is not None:
                 out[rid] = b
         return out

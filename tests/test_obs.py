@@ -163,6 +163,31 @@ def test_breakdown_with_preemption_sums_exactly():
     assert b.e2e == 9 == b.queue_wait + b.prefill + b.decode + b.preempted
 
 
+def test_breakdown_chunked_prefill_done():
+    # submit 0, admit 2, prefill done 5 (a 4-tick chunked prefill),
+    # complete 9: wait 1, prefill 5-2+1=4, decode 9-5=4 -> e2e 9
+    b = from_events(1, submit=0, admits=[2], preempts=[], complete=9,
+                    prefill_dones=[5])
+    assert (b.queue_wait, b.prefill, b.decode, b.preempted) == (1, 4, 4, 0)
+    assert b.e2e == 9
+
+
+def test_breakdown_preempted_mid_prefill():
+    # window 1 (admit 2 .. preempt 4) has NO done tick: the whole residency
+    # counts as prefill and contributes zero preempted ticks; window 2
+    # (admit 6) finishes prefill at 8 and completes at 9
+    b = from_events(1, submit=0, admits=[2, 6], preempts=[4], complete=9,
+                    prefill_dones=[8])
+    assert (b.queue_wait, b.prefill, b.decode, b.preempted) == (2, 6, 1, 0)
+    assert b.e2e == 9
+
+
+def test_breakdown_rejects_stray_prefill_done():
+    with pytest.raises(ValueError, match="outside"):
+        from_events(1, submit=0, admits=[2], preempts=[], complete=9,
+                    prefill_dones=[1])
+
+
 def test_breakdown_in_flight_and_invalid():
     assert from_events(1, submit=0, admits=[2], preempts=[],
                        complete=None) is None
@@ -260,6 +285,28 @@ def test_stage_sums_exact_under_preemption(setup):
     snap = tel.metrics.snapshot()
     assert (snap['serving_preemptions_total{engine="continuous"}']
             == eng.preemptions)
+
+
+def test_stage_sums_exact_chunked(setup):
+    """Chunked prefill spreads the prefill stage over several ticks; the
+    stage partition must still telescope exactly, and streamed requests
+    must surface multi-tick prefill WITHOUT fake preempted ticks."""
+    cfg, params = setup
+    rng = np.random.default_rng(29)
+    tel = Telemetry(sample_every=1)
+    rec = TrafficRecorder()
+    eng = ServingEngine(cfg, params, slots=2, s_max=32, prefill_chunk=8,
+                        recorder=rec, telemetry=tel)
+    for i, n in enumerate((20, 9, 25, 6)):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, n)
+                           .astype(np.int32), max_new=4))
+    eng.run_until_idle()
+    bds = _assert_exact(rec)
+    assert len(bds) == 4
+    assert any(b.prefill > 1 and b.n_preempts == 0 for b in bds.values()), \
+        "streamed prompts must show multi-tick prefill"
+    snap = tel.metrics.snapshot()
+    assert snap['serving_prefill_chunks_total{engine="continuous"}'] > 0
 
 
 def test_engine_gauges_and_spans(setup):

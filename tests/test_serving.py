@@ -205,16 +205,18 @@ def test_bucket_respects_decode_budget(setup):
     solo.submit(ref)
     solo.run_until_idle()
     assert req.out == ref.out
-    # prompt + decode budget > s_max: loud failure, not silent corruption
+    # prompt + decode budget > s_max: loud failure AT SUBMIT, before the
+    # request enters the queue (admission-time rejection leaked its blocks)
     eng2 = ServingEngine(cfg, params, slots=1, s_max=24)
-    eng2.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab, 20)
-                        .astype(np.int32), max_new=10))
     with pytest.raises(ValueError, match="exceeds s_max"):
-        eng2.run_until_idle()
+        eng2.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab, 20)
+                            .astype(np.int32), max_new=10))
+    assert not eng2.queue
 
 
 def _solo_tokens(cfg, params, prompt, max_new, s_max=64):
-    eng = ServingEngine(cfg, params, slots=1, s_max=s_max)
+    eng = ServingEngine(cfg, params, slots=1, s_max=s_max,
+                        prefill_chunk=None)   # whole-prompt reference
     req = Request(rid=0, prompt=prompt, max_new=max_new)
     eng.submit(req)
     eng.run_until_idle()
@@ -457,6 +459,160 @@ def test_partitioned_es_engine_full_offload(setup):
     assert req.out == _solo_tokens(cfg, params, prompt, 4)
     with pytest.raises(ValueError, match="full-offload"):
         PartitionedLM(cfg, params, 2).es_engine(slots=1, s_max=64)
+
+
+# -- chunked prefill ---------------------------------------------------------
+
+def _chunk_archs():
+    import dataclasses
+    return [
+        ("attention", reduced(get_config("qwen3-0.6b"), n_layers=4)),
+        ("hybrid-grs", dataclasses.replace(
+            reduced(get_config("mamba2-1.3b")),
+            name="hybrid-grs-chunk", block_pattern=("g", "r", "s"),
+            n_layers=6, n_heads=4, n_kv=2, head_dim=16, d_ff=128,
+            rnn_width=32)),
+        ("local-lg", dataclasses.replace(
+            reduced(get_config("qwen3-0.6b"), n_layers=4),
+            name="local-lg-chunk", block_pattern=("l", "g"), window=12)),
+    ]
+
+
+CHUNK_ARCHS = _chunk_archs()
+
+
+@pytest.fixture(scope="module", params=[a[0] for a in CHUNK_ARCHS])
+def chunk_arch(request):
+    cfg = dict(CHUNK_ARCHS)[request.param]
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_chunked_prefill_matches_whole_and_solo(chunk_arch):
+    """Tentpole exactness pin: admitting prompts in fixed-size prefill
+    chunks must be invisible to outputs -- chunked == whole-prompt ==
+    solo greedy tokens on attention, hybrid (g/r/s), and local-window
+    stacks, with ragged prompt lengths spanning chunk boundaries."""
+    cfg, params = chunk_arch
+    rng = np.random.default_rng(51)
+    spec = [(rng.integers(0, cfg.vocab, n).astype(np.int32), m)
+            for n, m in ((20, 5), (11, 4), (41, 6), (5, 3))]
+    outs = {}
+    for chunk in (8, None):
+        eng = ServingEngine(cfg, params, slots=2, s_max=64,
+                            prefill_chunk=chunk)
+        reqs = [Request(rid=i, prompt=p, max_new=m)
+                for i, (p, m) in enumerate(spec)]
+        for r in reqs:
+            eng.submit(r)
+        assert len(eng.run_until_idle()) == len(reqs)
+        assert eng.allocator.n_free == eng.allocator.capacity
+        outs[chunk] = [r.out for r in reqs]
+    assert outs[8] == outs[None]
+    for (p, m), got in zip(spec, outs[8]):
+        assert got == _solo_tokens(cfg, params, p, m), f"len {len(p)}"
+
+
+def test_chunked_preempt_mid_prefill_resumes_exact(setup):
+    """A streaming prefill evicted mid-chunk restarts from scratch on
+    re-admission and still produces exact tokens, with the KV sanitizer
+    cross-checking every block handoff and the final drain."""
+    from repro.traffic import TrafficRecorder
+    cfg, params = setup
+    rng = np.random.default_rng(53)
+    pa = rng.integers(0, cfg.vocab, 10).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, 21).astype(np.int32)
+    rec = TrafficRecorder()
+    # 9 allocatable blocks of 4: A (10 prompt + 20 new) grows past its
+    # initial 3 blocks while B's 21-token prompt is mid-stream at 6 -- the
+    # growth preempts B, the youngest, before its prefill completes
+    eng = ServingEngine(cfg, params, slots=2, s_max=64, kv_block=4,
+                        kv_blocks=10, prefill_chunk=8, sanitize=True,
+                        recorder=rec)
+    a = Request(rid=0, prompt=pa, max_new=20)
+    b = Request(rid=1, prompt=pb, max_new=4)
+    eng.submit(a)
+    eng.submit(b)
+    eng.run_until_idle()
+    assert eng.preemptions > 0, "pool was sized to evict the stream"
+    ev = rec.events[1]
+    # the evicted window finished no prefill: the single done tick belongs
+    # to the SECOND admission, so the eviction really hit mid-prefill
+    assert len(ev.admits) == 2 and len(ev.prefill_dones) == 1
+    assert ev.prefill_dones[0] >= ev.admits[1]
+    assert a.out == _solo_tokens(cfg, params, pa, 20)
+    assert b.out == _solo_tokens(cfg, params, pb, 4)
+    assert eng.allocator.n_free == eng.allocator.capacity
+    eng._san.check_drain()
+
+
+def test_oversized_submit_no_block_leak(setup):
+    """Regression (admission-path leak): an oversized request used to pass
+    submit, then raise mid-admission AFTER allocating its prompt blocks --
+    leaking them and dropping the request.  submit now rejects it up front
+    and traffic behind it is untouched."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, s_max=32, kv_block=4,
+                        kv_blocks=9, sanitize=True)
+    with pytest.raises(ValueError, match="exceeds s_max"):
+        eng.submit(Request(rid=0, prompt=np.zeros(30, np.int32), max_new=8))
+    assert not eng.queue
+    assert eng.allocator.n_free == eng.allocator.capacity
+    ok = Request(rid=1, prompt=np.arange(6, dtype=np.int32), max_new=4)
+    eng.submit(ok)
+    eng.run_until_idle()
+    assert len(ok.out) == 4
+    assert eng.allocator.n_free == eng.allocator.capacity
+    eng._san.check_drain()
+
+
+def test_sync_wave_per_request_budgets(setup):
+    """Regression (sync-mode false rejection): the wave used to validate
+    the joint width bucket against the batch's LARGEST max_new, so a
+    (101-prompt, 4-new) + (8-prompt, 28-new) pair at s_max=128 was
+    rejected even though each request fits its own budget.  The wave
+    builder now tracks per-request budgets and serves the pair exactly."""
+    cfg, params = setup
+    rng = np.random.default_rng(59)
+    pa = rng.integers(0, cfg.vocab, 101).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    eng = ServingEngine(cfg, params, slots=2, s_max=128, sync_batching=True)
+    a = Request(rid=0, prompt=pa, max_new=4)
+    b = Request(rid=1, prompt=pb, max_new=28)
+    eng.submit(a)
+    eng.submit(b)
+    assert len(eng.run_until_idle()) == 2
+    assert a.out == _solo_tokens(cfg, params, pa, 4, s_max=128)
+    assert b.out == _solo_tokens(cfg, params, pb, 28, s_max=128)
+
+
+def test_run_until_idle_raises_on_max_steps(setup):
+    """Regression: hitting max_steps used to return normally with requests
+    still in flight -- silent truncation, callers saw a short result list.
+    Now it raises, naming the stuck work."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, slots=1, s_max=64)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.arange(5, dtype=np.int32) + i,
+                           max_new=30))
+    with pytest.raises(RuntimeError, match="did not drain"):
+        eng.run_until_idle(max_steps=3)
+
+
+def test_chunked_rejects_bad_chunk_and_moe(setup):
+    """prefill_chunk validation: out-of-range sizes raise; MoE stacks
+    silently fall back to whole-prompt prefill (capacity routing couples
+    tokens across a dispatch group, so chunked prefill cannot be exact)."""
+    cfg, params = setup
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(cfg, params, slots=1, s_max=64, prefill_chunk=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(cfg, params, slots=1, s_max=64, prefill_chunk=65)
+    moe = reduced(get_config("moonshot-v1-16b-a3b"))
+    assert "m" in moe.block_pattern
+    moe_params = transformer.init_params(jax.random.PRNGKey(0), moe)
+    eng = ServingEngine(moe, moe_params, slots=1, s_max=64, prefill_chunk=8)
+    assert eng.prefill_chunk is None
 
 
 @pytest.mark.slow
